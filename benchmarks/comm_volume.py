@@ -1,0 +1,50 @@
+"""§Paper-claims: communication-volume comparison Jigsaw vs Megatron-LM.
+
+Paper claim: Jigsaw needs NO weight allgather/broadcast (zero redundancy)
+and completes each linear with partial-sum exchanges.  We verify on real
+compiled HLO (4-way host mesh): count collective kinds and bytes for one
+forward pass of an MLP pair under (a) Jigsaw-1D rs, (b) Jigsaw ring,
+(c) Megatron-style (allreduce), (d) GSPMD-derived.
+"""
+from benchmarks.common import emit, run_subprocess_devices
+
+CODE = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.api import JigsawConfig, mlp_apply, mlp_init
+from repro.launch.mesh import make_host_mesh
+from repro.launch.analysis import collective_stats
+
+mesh = make_host_mesh(model=4, data=1)
+params = mlp_init(jax.random.PRNGKey(0), 512, 2048, 512, bias=False)
+x = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 512))
+for impl in ["rs", "ring", "allreduce", "gspmd"]:
+    cfg = JigsawConfig(impl=impl)
+    with jax.set_mesh(mesh):
+        comp = jax.jit(lambda p, v: mlp_apply(p, v, cfg)).lower(
+            params, x).compile()
+    st = collective_stats(comp.as_text())
+    print(f"IMPL {impl} bytes {st.total_bytes:.0f} counts {st.counts}")
+"""
+
+
+def run():
+    from repro.core.jigsaw import (comm_volume_jigsaw_1d,
+                                   comm_volume_megatron_pair)
+    out = run_subprocess_devices(CODE, 4)
+    rows = []
+    for line in out.splitlines():
+        if line.startswith("IMPL"):
+            parts = line.split()
+            impl, bts = parts[1], float(parts[3])
+            rows.append((f"comm/{impl}", 0,
+                         f"hlo_bytes_per_dev={bts:.0f}"))
+    an_j = comm_volume_jigsaw_1d(256, 512, 4).bytes_per_device * 2  # 2 linears
+    an_m = comm_volume_megatron_pair(256, 512, 4).bytes_per_device
+    rows.append(("comm/analytic", 0,
+                 f"jigsaw1d={an_j:.0f}|megatron_pair={an_m:.0f}"
+                 f"|jigsaw_vs_megatron={an_j / an_m:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

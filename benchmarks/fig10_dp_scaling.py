@@ -1,0 +1,52 @@
+"""Paper Fig. 10 / Table 2: weak scaling of intra-node MP x inter-node DP
+to 256 GPUs.
+
+Analytic v5e model: per-step time = compute + jigsaw-MP collectives +
+DP gradient allreduce (ring over the data axis; volume = local param
+shard bytes -- the paper's point: MP shards the model, so each DP ring
+only reduces 1/n of the parameters, which is why 2-/4-way scale better
+than 1-way at 256 devices: 68%/72% vs 51%).
+"""
+from benchmarks.common import emit
+
+
+def table2_configs():
+    # (ways, TFLOPs/fwd/GPU, params_mil) -- paper Table 2
+    return [(1, 16, 1000), (2, 32, 1400), (4, 64, 2400)]
+
+
+def run():
+    from repro.configs.weathermixer_1b import ZOO, _wm
+    from repro.core.jigsaw import comm_volume_jigsaw_1d
+    from repro.launch import analysis as A
+
+    cfg_for = {1: ZOO[7], 2: ZOO[8], 9: ZOO[9], 4: ZOO[9]}
+    rows = []
+    for ways, tf, params_mil in table2_configs():
+        cfg = cfg_for[ways]
+        flops = 3 * sum(A.flops_forward(cfg, 1, 0).values())
+        t_tokens = (cfg.wm_lat // cfg.wm_patch) * (cfg.wm_lon // cfg.wm_patch)
+        params_bytes = cfg.param_count() * 4
+        base_t = None
+        for gpus in (ways, 8, 64, 256):
+            dp = gpus // ways
+            t_comp = flops / (ways * A.PEAK_FLOPS_BF16)
+            v_mp = 0 if ways == 1 else 3 * 2 * cfg.n_layers * \
+                comm_volume_jigsaw_1d(t_tokens, cfg.d_model,
+                                      ways).bytes_per_device
+            # DP ring allreduce of the LOCAL param shard
+            shard = params_bytes / ways
+            v_dp = 0 if dp == 1 else 2 * (dp - 1) / dp * shard
+            t = t_comp + (v_mp + v_dp) / A.ICI_BW
+            base_t = base_t or t
+            eff = base_t / t
+            pflops = flops * dp / t / 1e15
+            rows.append((f"fig10/{ways}way/{gpus}gpu", int(t * 1e6),
+                         f"weak_eff={eff:.2f}|agg_pflops={pflops:.1f}"))
+    rows.append(("fig10/claim", 0,
+                 "MP_shards_gradients=>higher_DP_efficiency_at_256"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,132 @@
+"""Paper Figs. 8 (strong) and 9 (weak) scaling of Jigsaw model parallelism.
+
+Two complementary measurements:
+  * MEASURED: wall-clock of a real reduced-WM train step at 1-, 2-, 4-way
+    Jigsaw on host-emulated devices (subprocess per mesh size).  Absolute
+    times are CPU-emulation artifacts, but the ratios expose the
+    communication structure.
+  * ANALYTIC (v5e): roofline-model speedups for the paper's model sizes
+    (1/4/16 TFLOPs per forward pass), with and without data loading --
+    the four panels of Fig. 8, plus the Fig. 9 weak-scaling efficiency.
+
+Paper baselines to beat: Megatron-LM strong scaling 1.6x/2.3x (2/4-way)
+on a 1.2B model; weak scaling 82%.
+"""
+from benchmarks.common import emit, run_subprocess_devices
+
+MEASURE_CODE = """
+import time, jax
+import jax.numpy as jnp
+from repro.configs.registry import get_config
+from repro.launch import shapes as SH
+from repro.launch.mesh import make_host_mesh
+from repro.launch import specs as S
+from repro.models import registry as M
+from repro.optim import adam
+from repro.train.step import make_train_step
+
+way = {way}
+cfg = get_config("weathermixer-1b").reduced().replace(
+    scheme="1d" if way > 1 else "none",
+    wm_lat=64, wm_lon=128, d_model=256, wm_d_tok=512, wm_d_ch=256)
+jcfg = SH.jigsaw_for(cfg)
+params = M.init(jax.random.PRNGKey(0), cfg)
+acfg = adam.AdamConfig()
+opt = adam.init(params, acfg)
+step = make_train_step(cfg, jcfg, acfg)
+import numpy as np
+b = {{"fields": jnp.asarray(np.random.randn(4, 64, 128, 8), np.float32)}}
+b["target"] = b["fields"] * 0.9
+
+def run():
+    global params, opt
+    jitted = jax.jit(step, donate_argnums=(0, 1))
+    params, opt, _ = jitted(params, opt, b)   # compile+warm
+    jax.block_until_ready(params)
+    t0 = time.time()
+    for _ in range(10):
+        params, opt, _ = jitted(params, opt, b)
+    jax.block_until_ready(jax.tree.leaves(params)[0])
+    print("SECONDS", (time.time() - t0) / 10)
+
+if way > 1:
+    mesh = make_host_mesh(model=way, data=1)
+    with jax.set_mesh(mesh):
+        run()
+else:
+    run()
+"""
+
+
+def measured_strong_scaling():
+    rows = []
+    times = {}
+    for way in (1, 2, 4):
+        out = run_subprocess_devices(MEASURE_CODE.format(way=way),
+                                     n_devices=max(way, 1))
+        secs = float([l for l in out.splitlines()
+                      if l.startswith("SECONDS")][0].split()[1])
+        times[way] = secs
+        rows.append((f"fig8/measured/{way}way", int(secs * 1e6),
+                     f"speedup={times[1] / secs:.2f}"))
+    return rows, times
+
+
+def analytic_scaling():
+    """v5e roofline model for the paper's 1/4/16-TFLOP models."""
+    from repro.configs.weathermixer_1b import ZOO
+    from repro.core.jigsaw import comm_volume_jigsaw_1d
+    from repro.launch import analysis as A
+    from benchmarks.fig7_roofline import DISK_BW, SAMPLE_BYTES
+
+    rows = []
+    for num, label in [(3, "1T"), (5, "4T"), (7, "16T")]:
+        cfg = ZOO[num]
+        flops = 3 * sum(A.flops_forward(cfg, 1, 0).values())
+        t_tokens = (cfg.wm_lat // cfg.wm_patch) * (cfg.wm_lon // cfg.wm_patch)
+        for with_io in (False, True):
+            t1 = None
+            for way in (1, 2, 4):
+                t_comp = flops / (way * A.PEAK_FLOPS_BF16)
+                v = 0 if way == 1 else 3 * 2 * cfg.n_layers * \
+                    comm_volume_jigsaw_1d(t_tokens, cfg.d_model,
+                                          way).bytes_per_device
+                t_coll = v / A.ICI_BW
+                t_io = SAMPLE_BYTES / (way * DISK_BW) if with_io else 0.0
+                t = max(t_io, t_comp + t_coll)
+                t1 = t1 or t
+                rows.append((
+                    f"fig8/analytic/{label}/{'full' if with_io else 'noio'}"
+                    f"/{way}way", int(t * 1e6),
+                    f"speedup={t1 / t:.2f}"))
+    # Fig 9 weak scaling: FLOPs/GPU constant (models 3,5,7 at 1,2,4-way)
+    for with_io in (False, True):
+        base_t = None
+        for way, num in [(1, 3), (2, 5), (4, 7)]:
+            cfg = ZOO[num]
+            flops = 3 * sum(A.flops_forward(cfg, 1, 0).values())
+            t_tokens = (cfg.wm_lat // cfg.wm_patch) * \
+                (cfg.wm_lon // cfg.wm_patch)
+            t_comp = flops / (way * A.PEAK_FLOPS_BF16)
+            v = 0 if way == 1 else 3 * 2 * cfg.n_layers * \
+                comm_volume_jigsaw_1d(t_tokens, cfg.d_model,
+                                      way).bytes_per_device
+            t_io = SAMPLE_BYTES / (way * DISK_BW) if with_io else 0.0
+            t = max(t_io, t_comp + v / A.ICI_BW)
+            base_t = base_t or t
+            eff = base_t / t
+            rows.append((f"fig9/analytic/{'full' if with_io else 'noio'}"
+                         f"/{way}way", int(t * 1e6),
+                         f"weak_eff={eff:.2f}"
+                         f"|superscalar={eff > 1.001}"))
+    return rows
+
+
+def run():
+    rows, _ = measured_strong_scaling()
+    rows += analytic_scaling()
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

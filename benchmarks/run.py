@@ -1,0 +1,65 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig7,fig10] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV (plus section banners on stderr).
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keywords")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the training-based benchmarks")
+    args = ap.parse_args()
+
+    from benchmarks import (comm_volume, fig3_scaling_loss,
+                            fig4_equivalent_usage, fig7_roofline,
+                            fig10_dp_scaling, fig56_rollout, fig89_scaling,
+                            table1_model_zoo, table3_energy)
+
+    modules = [
+        ("table1", table1_model_zoo),
+        ("fig3", fig3_scaling_loss),
+        ("fig4", fig4_equivalent_usage),
+        ("fig56", fig56_rollout),
+        ("fig7", fig7_roofline),
+        ("fig89", fig89_scaling),
+        ("fig10", fig10_dp_scaling),
+        ("table3", table3_energy),
+        ("comm", comm_volume),
+    ]
+    slow = {"fig3", "fig4", "fig56", "fig89"}
+    if args.fast:
+        modules = [(k, m) for k, m in modules if k not in slow]
+    if args.only:
+        keys = set(args.only.split(","))
+        modules = [(k, m) for k, m in modules if k in keys]
+
+    print("name,us_per_call,derived")
+    failures = []
+    for key, mod in modules:
+        print(f"[bench] {key} ({mod.__name__})", file=sys.stderr)
+        t0 = time.time()
+        try:
+            rows = mod.run()
+            for r in rows:
+                print(",".join(str(x) for x in r))
+        except Exception as e:
+            failures.append((key, e))
+            traceback.print_exc()
+            print(f"{key}/ERROR,0,{type(e).__name__}")
+        print(f"[bench] {key} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed: "
+                         f"{[k for k, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Table 1: the WeatherMixer scaling zoo.
+
+Validates our configs against the paper's own numbers: parameter counts
+(paper's "Params (mil)" column) and TFLOPs per forward pass (the defining
+column -- workloads 0.25..64 TFLOPs).  This is the §Paper-claims check
+that WeatherMixer's workload scales linearly in input size and that our
+FLOPs model reproduces the paper's accounting.
+"""
+from benchmarks.common import Timer, emit
+
+# paper Table 1: model # -> (TFLOPs/forward, params (mil))
+PAPER = {1: (0.25, 60), 2: (0.5, 230), 3: (1, 240), 4: (2, 260),
+         5: (4, 500), 6: (8, 980), 7: (16, 1400), 8: (32, 2000),
+         9: (64, 2600)}
+
+
+def run():
+    from repro.configs.weathermixer_1b import ZOO
+    from repro.launch import analysis as A
+
+    rows = []
+    with Timer() as t:
+        for num, cfg in ZOO.items():
+            flops_fwd = sum(A.flops_forward(cfg, 1, 0).values())
+            tflops = flops_fwd / 1e12
+            params_m = cfg.param_count() / 1e6
+            paper_tf, paper_pm = PAPER[num]
+            rows.append((f"table1/model{num}", 0,
+                         f"tflops_fwd={tflops:.2f}|paper={paper_tf}"
+                         f"|params_M={params_m:.0f}|paper_M={paper_pm}"
+                         f"|flops_ratio={tflops / paper_tf:.2f}"))
+    rows.append(("table1/zoo_total", int(t.seconds * 1e6), "n_models=9"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

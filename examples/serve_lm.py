@@ -1,0 +1,58 @@
+"""Serve a small LM with batched requests: prefill + batched greedy
+decode through the Jigsaw-sharded serve_step (deliverable b, serving
+flavor).
+
+  python examples/serve_lm.py [--arch stablelm-3b] [--steps 24]
+"""
+import argparse
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--train-first", type=int, default=60,
+                    help="train briefly so generations are non-trivial")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs.registry import get_config
+    from repro.data.tokens import TokenDataConfig, TokenDataset
+    from repro.launch import shapes as SH
+    from repro.launch.train import train
+    from repro.models import registry as M
+    from repro.serve.step import generate
+
+    # quick training so the model predicts the affine-walk structure
+    _, params = train(args.arch, steps=args.train_first, batch=8,
+                      seq_len=64, reduced=True, lr=2e-3, log_every=30)
+    cfg = get_config(args.arch).reduced()
+    jcfg = SH.jigsaw_for(cfg)
+
+    ds = TokenDataset(TokenDataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=16, seed=123))
+    prompts = jax.numpy.asarray(
+        ds.sample_batch(0, args.batch)["tokens"][:, :8])
+    out = generate(params, prompts, cfg, jcfg, steps=args.steps,
+                   max_len=8 + args.steps + 2)
+    # the data's affine walk: next = (31 x + 17) % V; measure how often
+    # the model follows it (vs 1/V for random)
+    seq = np.concatenate([np.asarray(prompts), np.asarray(out)], axis=1)
+    pred = (seq[:, :-1] * 31 + 17) % cfg.vocab_size
+    acc = float((pred == seq[:, 1:]).mean())
+    print(f"\nbatched generation: {out.shape}")
+    for row in np.asarray(out)[:2]:
+        print("  tokens:", row[:16], "...")
+    print(f"affine-walk consistency of generations: {acc:.2f} "
+          f"(random would be {1 / cfg.vocab_size:.4f})")
+
+
+if __name__ == "__main__":
+    main()

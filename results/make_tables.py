@@ -1,0 +1,69 @@
+"""Convert dryrun JSONL records into the EXPERIMENTS.md roofline tables."""
+import json
+import sys
+from collections import defaultdict
+
+
+def load(path):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                recs.append(json.loads(line))
+    # keep the LAST record per key (re-runs supersede)
+    by_key = {}
+    for r in recs:
+        by_key[(r["arch"], r["shape"], r["multi_pod"],
+                r.get("scheme"), r.get("impl"))] = r
+    return list(by_key.values())
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.2f}ms"
+
+
+def roofline_table(recs, multi_pod=False):
+    rows = ["| arch | shape | compute | memory | collective | bottleneck "
+            "| useful% | fits HBM | arg+temp GiB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    sel = [r for r in recs if r["multi_pod"] == multi_pod]
+    sel.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in sel:
+        if r["status"] == "SKIP":
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP | | | "
+                        f"{r['reason'][:60]} | | | |")
+            continue
+        if r["status"] == "FAIL":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | "
+                        f"{r.get('error', '')[:60]} | | | |")
+            continue
+        gib = r["arg_gib"] + r["temp_gib"] + r["out_gib"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['bottleneck']}** | {r['useful_ratio'] * 100:.0f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} | {gib:.2f} |")
+    return "\n".join(rows)
+
+
+def summary(recs):
+    ok = sum(r["status"] == "OK" for r in recs)
+    skip = sum(r["status"] == "SKIP" for r in recs)
+    fail = sum(r["status"] == "FAIL" for r in recs)
+    return f"{ok} OK / {skip} SKIP (documented) / {fail} FAIL"
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1
+                else "results/dryrun_baseline.jsonl")
+    print("## Summary:", summary(recs))
+    print("\n### Single-pod (16x16 = 256 chips)\n")
+    print(roofline_table(recs, multi_pod=False))
+    print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    print(roofline_table(recs, multi_pod=True))

@@ -1,0 +1,82 @@
+"""Checkpointing: pytree <-> npz with path-flattened keys.
+
+Layout mirrors the zero-redundancy philosophy: ``save`` can write one
+file per top-level group (params/opt/meta) so shards stream
+independently; on a real pod each host would write its own slice -- here
+(single host) we serialize the addressable arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}{SEP}"))
+        return out
+    out[prefix.rstrip(SEP)] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def save(path: str, params, opt_state=None, step: int = 0,
+         extra: dict = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    np.savez_compressed(os.path.join(path, "params.npz"),
+                        **_flatten(jax.device_get(params)))
+    if opt_state is not None:
+        np.savez_compressed(os.path.join(path, "opt_state.npz"),
+                            **_flatten(jax.device_get(opt_state)))
+    meta = {"step": int(step), **(extra or {})}
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, like_params=None, like_opt=None
+            ) -> Tuple[Any, Any, int]:
+    """Returns (params, opt_state, step).  If ``like_*`` pytrees are given,
+    shapes/dtypes are validated against them."""
+    flat = dict(np.load(os.path.join(path, "params.npz")))
+    params = _unflatten(flat)
+    opt_state = None
+    opt_path = os.path.join(path, "opt_state.npz")
+    if os.path.exists(opt_path):
+        opt_state = _unflatten(dict(np.load(opt_path)))
+    with open(os.path.join(path, "meta.json")) as f:
+        step = json.load(f)["step"]
+
+    def check(like, got, name):
+        flat_like = _flatten(jax.device_get(like))
+        flat_got = _flatten(got)
+        if set(flat_like) != set(flat_got):
+            missing = set(flat_like) ^ set(flat_got)
+            raise ValueError(f"{name}: key mismatch {sorted(missing)[:5]}")
+        for k, v in flat_like.items():
+            if v.shape != flat_got[k].shape:
+                raise ValueError(
+                    f"{name}[{k}]: shape {flat_got[k].shape} != {v.shape}")
+
+    if like_params is not None:
+        check(like_params, params, "params")
+    if like_opt is not None and opt_state is not None:
+        check(like_opt, opt_state, "opt_state")
+    return params, opt_state, step

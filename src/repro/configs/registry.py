@@ -1,0 +1,35 @@
+"""Config registry: ``get_config(arch_id)`` for every assigned arch."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "dbrx-132b",
+    "jamba-1.5-large-398b",
+    "internlm2-1.8b",
+    "pixtral-12b",
+    "gemma3-27b",
+    "phi3.5-moe-42b-a6.6b",
+    "whisper-small",
+    "stablelm-3b",
+    "mamba2-130m",
+    "h2o-danube-1.8b",
+    "weathermixer-1b",
+]
+
+_MODULE_FOR = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+               for a in ARCH_IDS}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(_MODULE_FOR[arch_id])
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

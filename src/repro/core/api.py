@@ -1,0 +1,128 @@
+"""Composable Jigsaw modules: functional param-init / apply pairs.
+
+Everything in this framework is a pure function over parameter pytrees
+(nested dicts of jax.Arrays).  ``JigsawConfig`` selects how each linear
+layer completes its distributed contraction:
+
+  scheme="1d", impl in {"ring","rs","gspmd","allreduce"}   (paper 2-way, n-way)
+  scheme="2d"                                               (paper 4-way, Cannon)
+
+``impl="rs"`` (psum_scatter) is the default production path; ``"ring"`` is
+the paper-faithful explicit schedule; ``"gspmd"`` lets XLA derive the
+collectives from sharding constraints alone (beyond-paper comparison).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import jigsaw
+from repro.core.sharding import RULES_1D, ShardingRules, constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class JigsawConfig:
+    rules: ShardingRules = RULES_1D
+    scheme: str = "1d"            # "1d" | "2d" | "none"
+    impl: str = "rs"              # for scheme="1d"
+    accum_dtype: Optional[jnp.dtype] = jnp.float32
+    fsdp: bool = False            # weights also sharded over data (huge archs)
+
+    def replace(self, **kw) -> "JigsawConfig":
+        return dataclasses.replace(self, **kw)
+
+
+DEFAULT_JIGSAW = JigsawConfig()
+GSPMD_JIGSAW = JigsawConfig(impl="gspmd")
+
+
+def head_config(cfg: JigsawConfig) -> JigsawConfig:
+    """Jigsaw config for the LM head / unembed.
+
+    The explicit reduce-scatter is the paper's scheme for *inner* layers,
+    but for the final vocab projection its transpose (an all-gather of the
+    full-vocab gradient, ~22 GiB/device at train_4k) is catastrophic.
+    With sharding constraints only, the cross-entropy stays element-wise
+    over the vocab-sharded logits and the gradient never materializes
+    unsharded (EXPERIMENTS.md #Perf, iteration 1)."""
+    if cfg.scheme == "1d":
+        return cfg.replace(impl="gspmd")
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def linear_init(key: jax.Array, d_in: int, d_out: int, *,
+                dtype=jnp.float32, bias: bool = True, scale: float = None):
+    """Weights stored [d_out, d_in] (y = x @ w.T + b), LeCun-normal init."""
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    w = jax.random.normal(key, (d_out, d_in), dtype=jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear_apply(params, x: jax.Array, cfg: JigsawConfig = DEFAULT_JIGSAW,
+                 *, domain_dim: int = -2) -> jax.Array:
+    w = params["w"]
+    b = params.get("b")
+    if cfg.scheme == "2d":
+        return jigsaw.jigsaw_linear_2d(x, w, b, rules=cfg.rules,
+                                       domain_dim=domain_dim,
+                                       accum_dtype=cfg.accum_dtype)
+    if cfg.scheme == "1d":
+        return jigsaw.jigsaw_linear(x, w, b, rules=cfg.rules, impl=cfg.impl,
+                                    accum_dtype=cfg.accum_dtype,
+                                    w_data_sharded=cfg.fsdp)
+    # scheme="none": plain local matmul (single-device / tests)
+    y = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=cfg.accum_dtype or x.dtype).astype(x.dtype)
+    return y if b is None else y + b
+
+
+# ---------------------------------------------------------------------------
+# MLP (two linears + GELU) -- the WeatherMixer building block
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, d_in: int, d_hidden: int, d_out: int, *,
+             dtype=jnp.float32, bias: bool = True):
+    k1, k2 = jax.random.split(key)
+    return {"fc1": linear_init(k1, d_in, d_hidden, dtype=dtype, bias=bias),
+            "fc2": linear_init(k2, d_hidden, d_out, dtype=dtype, bias=bias)}
+
+
+def mlp_apply(params, x: jax.Array, cfg: JigsawConfig = DEFAULT_JIGSAW,
+              *, activation=jax.nn.gelu, domain_dim: int = -2) -> jax.Array:
+    h = linear_apply(params["fc1"], x, cfg, domain_dim=domain_dim)
+    h = activation(h)
+    return linear_apply(params["fc2"], h, cfg, domain_dim=domain_dim)
+
+
+def param_spec_tree(params, rules: ShardingRules, scheme: str = "1d"):
+    """PartitionSpecs for a linear/MLP param subtree (w: jigsaw layout,
+    b: sharded along the tp axis to match the output)."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec_for(path, leaf):
+        name = path[-1]
+        if name == "w":
+            return rules.weight(leaf.ndim) if scheme != "none" \
+                else rules.replicated(leaf.ndim)
+        if name == "b":
+            return P(rules.tp_axis) if scheme != "none" else P(None)
+        return rules.replicated(leaf.ndim)
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return spec_for(path, tree)
+
+    return walk(params)

@@ -1,0 +1,141 @@
+"""Mesh axes and sharding rules for Jigsaw parallelism.
+
+Jigsaw (Kieckhefen et al., 2025) shards BOTH the data sample (domain
+parallelism) and the weights / optimizer states (tensor parallelism) with
+zero memory redundancy: no parameter is ever allgathered onto one device.
+
+On TPU we realize this with a named mesh:
+
+    single-pod : (data=16, model=16)                   -- 256 chips
+    multi-pod  : (pod=2, data=16, model=16)            -- 512 chips
+
+The ``model`` axis carries the Jigsaw sharding:
+
+  * 1-D Jigsaw (paper's 2-way, generalized to n-way): every weight matrix
+    is sharded along its *contracting* dimension, activations along their
+    last (channel/feature) dimension; each linear layer completes the
+    contraction with a reduce-scatter (ring of partial sums -- exactly the
+    paper's overlap schedule, executed by the ICI).
+
+  * 2-D Jigsaw (paper's 4-way, generalized to p x q): the ``model`` axis is
+    factored into (``mdom``, ``mtp``); activations are sharded over
+    (domain-dim x channel-dim) and weights over (out-features x
+    in-features), and the contraction runs Cannon's algorithm.
+
+``pod`` and ``data`` are pure data-parallel axes: gradients are psum'd over
+them, parameters are replicated over them (optionally ZeRO-1 sharded --
+a beyond-paper extension).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Canonical axis names.
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+# Factored model axis for 2-D Jigsaw.
+MDOM_AXIS = "mdom"  # domain (spatial / token) sub-axis
+MTP_AXIS = "mtp"    # tensor (channel / feature) sub-axis
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Names of the mesh axes used for each parallelism role.
+
+    ``batch_axes`` are the pure data-parallel axes (gradient reduction).
+    ``model_axes`` carry Jigsaw.  For 1-D Jigsaw ``model_axes`` is a single
+    axis; for 2-D it is ``(mdom, mtp)``.
+    """
+
+    batch_axes: Tuple[str, ...] = (DATA_AXIS,)
+    model_axes: Tuple[str, ...] = (MODEL_AXIS,)
+
+    @property
+    def is_2d(self) -> bool:
+        return len(self.model_axes) == 2
+
+    @property
+    def tp_axis(self) -> str:
+        """The channel/feature (tensor-parallel) axis."""
+        return self.model_axes[-1]
+
+    @property
+    def dom_axis(self) -> Optional[str]:
+        """The domain (spatial/token) axis, if 2-D."""
+        return self.model_axes[0] if self.is_2d else None
+
+    # ---- canonical PartitionSpecs ------------------------------------
+    def batch(self, *trailing) -> P:
+        """Spec for an activation whose dim 0 is the (global) batch."""
+        return P(self.batch_axes, *trailing)
+
+    def act(self, ndim: int, *, domain_dim: Optional[int] = None,
+            feature_dim: int = -1) -> P:
+        """Activation spec: batch on batch_axes, feature dim on tp axis,
+        and (for 2-D Jigsaw) the domain dim on the dom axis."""
+        dims: list = [None] * ndim
+        dims[0] = self.batch_axes
+        dims[feature_dim % ndim] = self.tp_axis
+        if self.is_2d and domain_dim is not None:
+            dims[domain_dim % ndim] = self.dom_axis
+        return P(*dims)
+
+    def weight(self, ndim: int = 2, *, contracting_dim: int = -1,
+               out_dim: int = 0) -> P:
+        """Jigsaw weight spec.
+
+        1-D: shard the contracting dim on the tp axis (zero redundancy,
+        reduce-scatter completes the matmul).
+        2-D (Cannon layout): out-features on ``mtp``, in-features on
+        ``mdom`` -- see core/jigsaw.py for why the layout is transposed.
+        """
+        dims: list = [None] * ndim
+        if self.is_2d:
+            dims[out_dim % ndim] = self.tp_axis
+            dims[contracting_dim % ndim] = self.dom_axis
+        else:
+            dims[contracting_dim % ndim] = self.tp_axis
+        return P(*dims)
+
+    def replicated(self, ndim: int = 1) -> P:
+        return P(*([None] * ndim))
+
+
+# A default 1-D rule set, used throughout the configs.
+RULES_1D = ShardingRules()
+RULES_2D = ShardingRules(model_axes=(MDOM_AXIS, MTP_AXIS))
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    """Product of the mesh extents of ``axes`` (str or tuple)."""
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def pad_to_multiple(n: int, multiple: int) -> int:
+    return ((n + multiple - 1) // multiple) * multiple
+
+
+def divisible(n: int, p: int) -> bool:
+    return n % p == 0
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x

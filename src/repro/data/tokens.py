@@ -1,0 +1,39 @@
+"""Synthetic token-stream pipeline for the LM architectures.
+
+Deterministic, learnable structure: an affine congruential walk with
+random restarts -- next-token prediction has low achievable entropy, so
+smoke-training shows real loss decrease without any external data.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenDataConfig:
+    vocab_size: int
+    seq_len: int
+    seed: int = 0
+    restart_p: float = 0.05
+
+
+class TokenDataset:
+    def __init__(self, cfg: TokenDataConfig):
+        self.cfg = cfg
+
+    def sample_batch(self, step: int, batch_size: int) -> dict:
+        c = self.cfg
+        rng = np.random.default_rng(np.random.SeedSequence([c.seed, step]))
+        v = c.vocab_size
+        a, b = 31, 17
+        x = np.zeros((batch_size, c.seq_len + 1), np.int64)
+        x[:, 0] = rng.integers(0, v, batch_size)
+        restarts = rng.random((batch_size, c.seq_len)) < c.restart_p
+        fresh = rng.integers(0, v, (batch_size, c.seq_len))
+        for t in range(c.seq_len):
+            nxt = (x[:, t] * a + b) % v
+            x[:, t + 1] = np.where(restarts[:, t], fresh[:, t], nxt)
+        return {"tokens": x[:, :-1].astype(np.int32),
+                "labels": x[:, 1:].astype(np.int32)}

@@ -1,0 +1,68 @@
+"""jit'd public wrappers around the Pallas kernels (padding + reshapes).
+
+``mixer_mlp`` is the drop-in fused path for the WeatherMixer mixing MLPs:
+two MXU-tiled GEMMs with the GELU fused into the first's epilogue.  The
+wrapper pads every dim up to the block grid and slices the result back.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_matmul import block_matmul
+
+
+def _pad_to(a: jax.Array, dim: int, mult: int) -> jax.Array:
+    rem = a.shape[dim] % mult
+    if rem == 0:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[dim] = (0, mult - rem)
+    return jnp.pad(a, pad)
+
+
+@partial(jax.jit, static_argnames=("epilogue", "block_m", "block_n",
+                                   "block_k", "interpret"))
+def matmul(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None, *,
+           epilogue: str = "none", block_m: int = 256, block_n: int = 256,
+           block_k: int = 512, interpret: bool = None) -> jax.Array:
+    """Padded/blocked y = epilogue(x @ w.T + b) for arbitrary 2-D shapes."""
+    m, k = x.shape
+    n = w.shape[0]
+    bm = min(block_m, max(8, m))
+    xp = _pad_to(_pad_to(x, 0, block_m), 1, block_k)
+    wp = _pad_to(_pad_to(w, 0, block_n), 1, block_k)
+    bp = _pad_to(b, 0, block_n) if b is not None else None
+    y = block_matmul(xp, wp, bp, block_m=block_m, block_n=block_n,
+                     block_k=block_k, epilogue=epilogue,
+                     interpret=interpret)
+    return y[:m, :n]
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                   "interpret"))
+def mixer_mlp(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array,
+              b2: jax.Array, *, block_m: int = 256, block_n: int = 256,
+              block_k: int = 512, interpret: bool = None) -> jax.Array:
+    """Fused mixer MLP over the last dim: gelu(x @ w1.T + b1) @ w2.T + b2.
+
+    x: [..., rows, d_in]; w1: [d_h, d_in]; w2: [d_out, d_h].
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    h = matmul(x2, w1, b1, epilogue="gelu", block_m=block_m,
+               block_n=block_n, block_k=block_k, interpret=interpret)
+    y = matmul(h, w2, b2, epilogue="none", block_m=block_m,
+               block_n=block_n, block_k=block_k, interpret=interpret)
+    return y.reshape(lead + (w2.shape[0],))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra(c, b, x, dt, dac, *, interpret=None):
+    """Fused intra-chunk SSD (see kernels/ssd_chunk.py).  Accepts the
+    mamba2 layout [B, nc, Q, H, ...] and flattens to the kernel grid."""
+    from repro.kernels.ssd_chunk import ssd_intra_chunk
+    return ssd_intra_chunk(c, b, x, dt, dac, interpret=interpret)

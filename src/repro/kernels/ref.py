@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def block_matmul_ref(x: jax.Array, w: jax.Array,
+                     b: Optional[jax.Array] = None,
+                     epilogue: str = "none") -> jax.Array:
+    out = jax.lax.dot_general(x, w, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)[None, :]
+    if epilogue == "gelu":
+        out = jax.nn.gelu(out)
+    elif epilogue == "silu":
+        out = jax.nn.silu(out)
+    return out.astype(x.dtype)
+
+
+def mixer_mlp_ref(x: jax.Array, w1: jax.Array, b1: jax.Array,
+                  w2: jax.Array, b2: jax.Array) -> jax.Array:
+    """The WeatherMixer MLP: gelu(x @ w1.T + b1) @ w2.T + b2 over the last
+    dim of a [..., rows, d_in] tensor."""
+    h = block_matmul_ref(x.reshape(-1, x.shape[-1]), w1, b1, "gelu")
+    y = block_matmul_ref(h, w2, b2, "none")
+    return y.reshape(x.shape[:-1] + (w2.shape[0],))
+
+
+def ssd_intra_ref(c, b, x, dt, dac):
+    """Oracle for kernels/ssd_chunk.py: the intra-chunk SSD term.
+    c, b: [G, Q, N]; x: [G, Q, P]; dt, dac: [G, Q]."""
+    s = jnp.einsum("gin,gjn->gij", c.astype(jnp.float32),
+                   b.astype(jnp.float32))
+    seg = dac[:, :, None] - dac[:, None, :]
+    q = c.shape[1]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    att = jnp.where(tri[None], s * jnp.exp(seg), 0.0) * dt[:, None, :]
+    y = jnp.einsum("gij,gjp->gip", att, x.astype(jnp.float32))
+    return y.astype(x.dtype)

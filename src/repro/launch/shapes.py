@@ -1,0 +1,153 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for the dry-run.
+
+INPUT SHAPES (assigned):
+  train_4k       seq_len=  4,096  global_batch=256   (training)
+  prefill_32k    seq_len= 32,768  global_batch= 32   (inference-prefill)
+  decode_32k     seq_len= 32,768  global_batch=128   (inference-decode)
+  long_500k      seq_len=524,288  global_batch=  1   (long-context decode)
+
+No device memory is ever allocated here: parameters come from
+``jax.eval_shape`` over the real init, inputs are ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.api import JigsawConfig
+from repro.core.sharding import RULES_1D, RULES_2D, ShardingRules
+from repro.launch import specs as S
+from repro.models import registry as M
+from repro.optim import adam
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Is (arch x shape) runnable? Returns (ok, reason-if-not)."""
+    if cfg.family == "mixer" and shape.kind == "decode":
+        return False, "forecast model: no autoregressive decode step"
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: long_500k needs "
+                       "sub-quadratic attention (DESIGN.md skip)")
+    return True, ""
+
+
+def mixer_grid_for(shape: ShapeSpec, cfg: ModelConfig) -> Tuple[int, int]:
+    """WeatherMixer interprets seq_len as its token count: pick a
+    (lat, lon) grid with ~seq_len patches.  prefill_32k lands on
+    1456x1440 ~= the paper's 0.25-degree global grid."""
+    p = cfg.wm_patch
+    if shape.name == "train_4k":
+        return 512, 512          # 4096 tokens at patch 8
+    if shape.name == "prefill_32k":
+        return 1456, 1440        # 32760 tokens: paper-scale resolution
+    t = shape.seq_len
+    side = int(np.sqrt(t)) * p
+    return side, side
+
+
+def rules_for(cfg: ModelConfig) -> ShardingRules:
+    return RULES_2D if cfg.scheme == "2d" else RULES_1D
+
+
+def jigsaw_for(cfg: ModelConfig) -> JigsawConfig:
+    return JigsawConfig(rules=rules_for(cfg), scheme=cfg.scheme,
+                        impl=cfg.impl, fsdp=cfg.shard_params_over_data)
+
+
+def _sds(shape, dtype, mesh: Mesh, spec: P):
+    spec = S.sanitize_spec(shape, spec, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def param_structs(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules):
+    """Parameter ShapeDtypeStructs with Jigsaw shardings (no allocation)."""
+    shapes = jax.eval_shape(partial(M.init, cfg=cfg), jax.random.key(0))
+    pspecs = S.param_specs(shapes, cfg, rules, mesh)
+    pspecs = S.sanitize_tree(shapes, pspecs, mesh)
+    structs = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, pspecs)
+    return structs, pspecs
+
+
+def opt_structs(params_structs, pspecs, cfg: ModelConfig, mesh: Mesh,
+                adam_cfg: adam.AdamConfig, zero1: bool = False):
+    shapes = jax.eval_shape(partial(adam.init, cfg=adam_cfg),
+                            params_structs)
+    ospecs = S.opt_specs(shapes["mu"], pspecs,
+                         zero1_axis="data" if zero1 else None)
+    ospecs = S.sanitize_tree(shapes, ospecs, mesh)
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, ospecs), ospecs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                rules: ShardingRules):
+    """ShapeDtypeStructs for the step function's data arguments."""
+    bs = S.batch_specs(cfg, rules)
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "mixer":
+        lat, lon = mixer_grid_for(shape, cfg)
+        fshape = (b, lat, lon, cfg.wm_channels)
+        return {"fields": _sds(fshape, jnp.float32, mesh, bs["fields"]),
+                "target": _sds(fshape, jnp.float32, mesh, bs["target"])}
+
+    if shape.kind == "decode":
+        # decode consumes [B, 1] tokens; the cache carries seq_len.
+        return {"tokens": _sds((b, 1), jnp.int32, mesh, bs["tokens"])}
+
+    batch = {}
+    s_text = s
+    if cfg.family == "vlm":
+        npatch = cfg.n_patches
+        s_text = s - npatch
+        batch["embeds"] = _sds((b, npatch, cfg.d_model),
+                               jnp.dtype(cfg.compute_dtype), mesh,
+                               bs["embeds"])
+    if cfg.family == "audio":
+        batch["frames"] = _sds((b, cfg.n_frames, cfg.d_model),
+                               jnp.dtype(cfg.compute_dtype), mesh,
+                               bs["frames"])
+    batch["tokens"] = _sds((b, s_text), jnp.int32, mesh, bs["tokens"])
+    if shape.kind == "train":
+        batch["labels"] = _sds((b, s_text), jnp.int32, mesh, bs["labels"])
+    return batch
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                  rules: ShardingRules):
+    shapes = jax.eval_shape(
+        partial(M.init_cache, cfg, shape.global_batch, shape.seq_len))
+    cspecs = S.cache_specs(shapes, cfg, rules, mesh)
+    cspecs = S.sanitize_tree(shapes, cspecs, mesh)
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, cspecs), cspecs

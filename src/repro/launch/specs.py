@@ -1,0 +1,234 @@
+"""PartitionSpec derivation for parameters, batches, caches, optimizer.
+
+The rules encode Jigsaw's zero-redundancy layout (DESIGN.md §5):
+
+* every weight matrix ``w`` is sharded along its contracting (last) dim on
+  the ``model`` axis (1-D Jigsaw) or over (out x in) = (mtp x mdom) for the
+  2-D/Cannon scheme -- WeatherMixer token-mix weights use the transposed
+  (mdom x mtp) Cannon layout;
+* biases ride the output dim (tp axis);
+* MoE expert stacks shard the expert dim on ``model`` (expert parallelism);
+* very large archs additionally shard the output dim over ``data``
+  (``shard_params_over_data`` -- the FSDP-hybrid extension of n-way Jigsaw);
+* optimizer moments inherit the parameter specs exactly (zero redundancy
+  of optimizer state, paper §4);
+* KV caches shard heads on ``model`` when divisible, else the sequence dim
+  (flash-decoding-style); batch always on ``data`` (+``pod``).
+
+Any spec dim that does not divide its mesh axis extent falls back to
+GSPMD's padded sharding (allowed for jit boundaries), except where noted.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.sharding import ShardingRules
+
+# parameter leaf names that are always replicated
+_REPLICATED = {"scale", "bias", "A_log", "D", "dt_bias", "blend"}
+_TOKEN_MIX = {"tok_fc1", "tok_fc2"}     # WeatherMixer transposed layout
+
+
+def _axis(mesh: Mesh, name: Optional[str]) -> int:
+    return mesh.shape.get(name, 1) if name else 1
+
+
+def param_specs(params, cfg: ModelConfig, rules: ShardingRules,
+                mesh: Mesh):
+    """PartitionSpec pytree matching ``params``."""
+    tp = rules.tp_axis
+    dom = rules.dom_axis
+    data = rules.batch_axes[-1] if cfg.shard_params_over_data else None
+
+    def spec_for(path: Tuple[str, ...], leaf) -> P:
+        name = path[-1]
+        parent = path[-2] if len(path) > 1 else ""
+        nd = leaf.ndim
+        dims = [None] * nd
+        if name in _REPLICATED or parent == "router" or name == "pos":
+            return P(*dims)
+        if rules.is_2d:
+            # --- 2-D Jigsaw (WeatherMixer) ---
+            if name == "w":
+                if parent in _TOKEN_MIX:
+                    dims[nd - 2], dims[nd - 1] = dom, tp   # Cannon W@X
+                else:
+                    dims[nd - 2], dims[nd - 1] = tp, dom   # Cannon X@W^T
+            elif name == "b":
+                dims[nd - 1] = dom if parent in _TOKEN_MIX else tp
+            elif name == "table":
+                dims[nd - 1] = tp
+            return P(*dims)
+        # --- 1-D Jigsaw ---
+        if name == "w":
+            if parent == "lm_head":
+                # head weights [V, D] shard the OUT (vocab) dim, like the
+                # tied table: contracting-dim sharding makes GSPMD emit
+                # full-vocab f32 partials + allreduce (~96 GiB at
+                # pixtral train_4k).  See EXPERIMENTS.md #Perf C2.
+                dims[nd - 2] = tp
+                if data:
+                    dims[nd - 1] = data
+                return P(*dims)
+            dims[nd - 1] = tp          # contracting dim: zero redundancy
+            if data and nd >= 2:
+                dims[nd - 2] = data    # FSDP-hybrid for huge archs
+        elif name == "b":
+            dims[nd - 1] = tp
+        elif name == "table":
+            # vocab on tp: the embedding gather pays one [B,S,D] psum,
+            # but the (tied) LM head then contracts the *replicated* D dim
+            # and emits vocab-sharded logits -- sharding D instead makes
+            # GSPMD materialize full-vocab f32 partials (~22 GiB/device).
+            dims[nd - 2] = tp
+            if data:
+                dims[nd - 1] = data
+        elif name == "dec_pos":
+            dims[nd - 1] = tp
+        elif name == "conv_w":
+            dims[nd - 1] = tp
+        elif parent == "experts":
+            # [(L,) E, F, D] / [(L,) E, D, F]: experts on model axis
+            dims[nd - 3] = tp
+            if data:
+                dims[nd - 2] = data
+        return P(*dims)
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return spec_for(path, tree)
+
+    return walk(params)
+
+
+def opt_specs(opt_state, pspecs, zero1_axis: Optional[str] = None):
+    """Optimizer moments inherit parameter specs; step is replicated.
+
+    ``zero1_axis`` (beyond-paper, DESIGN.md §6.5): additionally shard
+    every moment over the data axis on its first unsharded dim --
+    ZeRO-1.  The Adam update then computes per-data-rank shards and
+    GSPMD allgathers the fresh params (the classic ZeRO-1 schedule),
+    cutting optimizer HBM by the data-axis extent.
+    """
+    def z1(spec: P) -> P:
+        if zero1_axis is None:
+            return spec
+        dims = list(spec)
+        for i, entry in enumerate(dims):
+            used = set()
+            for e in dims:
+                if e is not None:
+                    used |= set(e) if isinstance(e, tuple) else {e}
+            if entry is None and zero1_axis not in used:
+                dims[i] = zero1_axis
+                break
+        return P(*dims)
+
+    mspecs = jax.tree.map(z1, pspecs, is_leaf=lambda x: isinstance(x, P))
+    return {"step": P(), "mu": mspecs, "nu": mspecs}
+
+
+def batch_specs(cfg: ModelConfig, rules: ShardingRules):
+    """Input batch specs: batch dim over (pod+) data."""
+    bspec = rules.batch_axes
+    if cfg.family == "mixer":
+        # domain parallelism over (lon, channels): the sample itself is
+        # sharded -- each rank loads only its slice (paper §5).
+        if rules.is_2d:
+            fields = P(bspec, None, rules.dom_axis, rules.tp_axis)
+        else:
+            fields = P(bspec, None, None, rules.tp_axis)
+        return {"fields": fields, "target": fields}
+    specs = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    if cfg.family == "vlm":
+        specs["embeds"] = P(bspec, None, rules.tp_axis)
+    if cfg.family == "audio":
+        specs["frames"] = P(bspec, None, rules.tp_axis)
+    return specs
+
+
+def cache_specs(cache, cfg: ModelConfig, rules: ShardingRules, mesh: Mesh):
+    """KV/SSM cache specs for decode shapes."""
+    tp = rules.tp_axis
+    data = rules.batch_axes
+    p = _axis(mesh, tp)
+    kv_even = cfg.n_kv_heads > 0 and cfg.n_kv_heads % p == 0
+    ssm_even = cfg.ssm_heads > 0 and cfg.ssm_heads % p == 0
+
+    def spec_for(path, leaf):
+        name = path[-1]
+        nd = leaf.ndim
+        dims = [None] * nd
+        if name == "pos":
+            return P(*dims)
+        if name in ("k", "v", "lk", "lv", "gk", "gv", "rk", "rv"):
+            # [..., B, S, Hkv, hd]
+            dims[nd - 4] = data
+            mode = getattr(cfg, "kv_shard", "auto")
+            if mode == "auto":
+                mode = "heads" if kv_even else "seq"
+            if mode == "heads":
+                dims[nd - 2] = tp          # shard heads
+            elif mode == "headdim":
+                dims[nd - 1] = tp          # shard head_dim (GQA kv < tp)
+            else:
+                dims[nd - 3] = tp          # shard sequence (flash-decoding)
+            return P(*dims)
+        if name == "ssm":
+            # [..., B, H, P, N]
+            dims[nd - 4] = data
+            if ssm_even:
+                dims[nd - 3] = tp
+            return P(*dims)
+        if name == "conv":
+            # [..., B, K-1, conv_dim]
+            dims[nd - 3] = data
+            dims[nd - 1] = tp
+            return P(*dims)
+        if name == "enc":
+            # [B, frames, d_model]
+            dims[0] = data
+            dims[nd - 1] = tp
+            return P(*dims)
+        return P(*dims)
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return spec_for(path, tree)
+
+    return walk(cache)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sanitize_spec(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop spec entries whose mesh extent does not evenly divide the
+    corresponding dim (jit input shardings require even division; e.g.
+    long_500k's global_batch=1 cannot shard over data=16, and 8 KV heads
+    cannot shard over model=16 -- those dims replicate instead)."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for size, entry in zip(shape, dims):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        extent = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(entry if size % extent == 0 else None)
+    return P(*out)
+
+
+def sanitize_tree(shapes_tree, spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, sp: sanitize_spec(s.shape, sp, mesh), shapes_tree,
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,177 @@
+"""whisper-small: encoder-decoder audio transformer (arXiv:2212.04356).
+
+Per the assignment carve-out, the modality frontend (mel-spectrogram +
+two-conv feature extractor) is a STUB: ``input_specs`` provides precomputed
+frame embeddings [B, n_frames, d_model].  We implement the transformer
+backbone: a bidirectional encoder over frames and a causal decoder with
+cross-attention.  Whisper style: LayerNorm, GELU FFN, attention biases,
+learned decoder positions, sinusoidal encoder positions, no RoPE.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.api import DEFAULT_JIGSAW, JigsawConfig
+from repro.core.sharding import constrain
+from repro.models import layers as L
+
+
+def sinusoids(length: int, channels: int) -> jnp.ndarray:
+    """Whisper's sinusoidal positions for the encoder."""
+    log_timescale = math.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    ang = jnp.arange(length)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def _enc_layer_init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ka, kf = jax.random.split(key)
+    return {
+        "attn_norm": L.layernorm_init(cfg.d_model),
+        "attn": L.attention_init(ka, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.d_head, dtype=dtype,
+                                 bias=True),
+        "ffn_norm": L.layernorm_init(cfg.d_model),
+        "ffn": L.ffn_init(kf, cfg.d_model, cfg.d_ff, kind="gelu",
+                          dtype=dtype, bias=True),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ka, kc, kf = jax.random.split(key, 3)
+    p = _enc_layer_init(jax.random.fold_in(key, 7), cfg)
+    p["cross_norm"] = L.layernorm_init(cfg.d_model)
+    p["cross"] = L.attention_init(kc, cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.d_head, dtype=dtype,
+                                  bias=True)
+    return p
+
+
+def init(key: jax.Array, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kenc, kdec, kpos = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kenc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": L.embed_init(ke, cfg.vocab_padded, cfg.d_model, dtype=dtype),
+        "dec_pos": (jax.random.normal(kpos, (4096, cfg.d_model)) * 0.01
+                    ).astype(dtype),
+        "enc_layers": jax.vmap(partial(_enc_layer_init, cfg=cfg))(enc_keys),
+        "enc_norm": L.layernorm_init(cfg.d_model),
+        "dec_layers": jax.vmap(partial(_dec_layer_init, cfg=cfg))(dec_keys),
+        "dec_norm": L.layernorm_init(cfg.d_model),
+    }
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig,
+           jcfg: JigsawConfig = DEFAULT_JIGSAW) -> jax.Array:
+    """frames: [B, n_frames, d_model] stub embeddings -> encoder states."""
+    b, s, d = frames.shape
+    x = frames + sinusoids(s, d)[None].astype(frames.dtype)
+    positions = jnp.arange(s)
+    x = constrain(x, jcfg.rules.act(x.ndim))
+
+    def body(h, lp):
+        a = L.layernorm_apply(lp["attn_norm"], h)
+        out, _ = L.attention_apply(
+            lp["attn"], a, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.d_head, positions=positions, cfg=jcfg, causal=False,
+            rope_theta=None, q_chunk=cfg.attn_q_chunk)
+        h = h + out
+        f = L.layernorm_apply(lp["ffn_norm"], h)
+        h = h + L.ffn_apply(lp["ffn"], f, jcfg)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return L.layernorm_apply(params["enc_norm"], x)
+
+
+def _dec_layer(lp, x, enc, cfg, jcfg, positions, kv_cache=None, pos=None):
+    a = L.layernorm_apply(lp["attn_norm"], x)
+    out, nc = L.attention_apply(
+        lp["attn"], a, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.d_head, positions=positions, cfg=jcfg, causal=True,
+        rope_theta=None, kv_cache=kv_cache,
+        q_chunk=0 if kv_cache is not None else cfg.attn_q_chunk)
+    x = x + out
+    c = L.layernorm_apply(lp["cross_norm"], x)
+    out, _ = L.attention_apply(
+        lp["cross"], c, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.d_head, positions=positions, cfg=jcfg, causal=False,
+        rope_theta=None, x_kv=enc,
+        q_chunk=0 if positions.ndim > 1 else cfg.attn_q_chunk)
+    x = x + out
+    f = L.layernorm_apply(lp["ffn_norm"], x)
+    x = x + L.ffn_apply(lp["ffn"], f, jcfg)
+    return x, nc
+
+
+def apply(params, batch, cfg: ModelConfig,
+          jcfg: JigsawConfig = DEFAULT_JIGSAW) -> Tuple[jax.Array, jax.Array]:
+    """batch: {"frames": [B, F, D] (stub), "tokens": [B, S]}."""
+    enc = encode(params, batch["frames"], cfg, jcfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed_apply(params["embed"], tokens)
+    # wrap beyond the learned table (whisper's real ceiling is 448 tokens;
+    # the 32k assigned shapes are exercised purely as lowering shapes)
+    plen = params["dec_pos"].shape[0]
+    x = x + jnp.take(params["dec_pos"], jnp.arange(s) % plen,
+                     axis=0)[None].astype(x.dtype)
+    positions = jnp.arange(s)
+    x = constrain(x, jcfg.rules.act(x.ndim))
+
+    def body(h, lp):
+        h, _ = _dec_layer(lp, h, enc, cfg, jcfg, positions)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    x = L.layernorm_apply(params["dec_norm"], x)
+    logits = L.unembed_apply(params["embed"], x, jcfg)
+    return logits, jnp.float32(0.0)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16):
+    return {
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+        "k": jnp.zeros((cfg.n_layers, batch_size, max_len, cfg.n_kv_heads,
+                        cfg.d_head), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch_size, max_len, cfg.n_kv_heads,
+                        cfg.d_head), dtype),
+        # encoder states computed once at prefill, reused every step
+        "enc": jnp.zeros((batch_size, cfg.n_frames, cfg.d_model), dtype),
+    }
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig,
+                jcfg: JigsawConfig = DEFAULT_JIGSAW):
+    pos = cache["pos"]
+    x = L.embed_apply(params["embed"], tokens)
+    x = x + jnp.take(params["dec_pos"],
+                     pos % params["dec_pos"].shape[0],
+                     axis=0)[:, None, :].astype(x.dtype)
+    positions = pos[:, None]
+    enc = cache["enc"].astype(x.dtype)
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        h, nc = _dec_layer(lp, h, enc, cfg, jcfg, positions,
+                           kv_cache={"k": kc, "v": vc, "pos": pos}, pos=pos)
+        return h, (nc["k"], nc["v"])
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                         cache["v"]))
+    x = L.layernorm_apply(params["dec_norm"], x)
+    logits = L.unembed_apply(params["embed"], x, jcfg)
+    return logits, {"pos": pos + 1, "k": nk, "v": nv, "enc": cache["enc"]}

@@ -1,0 +1,204 @@
+"""jamba-1.5-large: hybrid Mamba + attention with MoE (arXiv:2403.19887).
+
+Layer pattern: 1 attention layer per ``attn_every`` (=8, the paper's 1:7
+interleave), MoE FFN on every other layer (``moe_every=2``), dense FFN
+otherwise.  The 72 layers are 9 repeats of an 8-layer "period"; we scan
+over periods with the period unrolled inside the body, so the HLO is
+O(period) and layer order is exact.
+
+NOTE (DESIGN.md §Arch-applicability): Jamba-1.5 uses Mamba-1 internally;
+we instantiate our Mamba-2 (SSD) mixer as the family representative --
+same recurrence structure, TPU-friendlier chunked scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.api import DEFAULT_JIGSAW, JigsawConfig
+from repro.core.sharding import constrain
+from repro.models import layers as L
+from repro.models.transformer import (FULL_WINDOW, _kv_spec, _layer_apply,
+                                      _norm_apply)
+
+
+def _slot_kind(cfg: ModelConfig, j: int) -> str:
+    return "attn" if cfg.is_attn_layer(j) else "ssm"
+
+
+def period_init(key: jax.Array, cfg: ModelConfig):
+    """Params for one period (attn_every layers), heterogeneous dict."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    per = cfg.attn_every
+    keys = jax.random.split(key, 2 * per)
+    p = {}
+    for j in range(per):
+        km, kf = keys[2 * j], keys[2 * j + 1]
+        blk = {"norm": L.rmsnorm_init(cfg.d_model)}
+        if _slot_kind(cfg, j) == "attn":
+            blk["attn"] = L.attention_init(km, cfg.d_model, cfg.n_heads,
+                                           cfg.n_kv_heads, cfg.d_head,
+                                           dtype=dtype, bias=cfg.attn_bias)
+        else:
+            blk["ssm"] = L.mamba2_init(km, cfg.d_model,
+                                       d_state=cfg.ssm_state,
+                                       n_heads=cfg.ssm_heads,
+                                       head_dim=cfg.ssm_head_dim,
+                                       conv_kernel=cfg.ssm_conv,
+                                       n_groups=cfg.ssm_groups,
+                                       expand=cfg.ssm_expand, dtype=dtype)
+        blk["ffn_norm"] = L.rmsnorm_init(cfg.d_model)
+        if cfg.is_moe_layer(j):
+            blk["moe"] = L.moe_init(kf, cfg.d_model, cfg.d_ff,
+                                    cfg.n_experts, kind=cfg.ffn_kind,
+                                    dtype=dtype)
+        else:
+            blk["ffn"] = L.ffn_init(kf, cfg.d_model, cfg.d_ff,
+                                    kind=cfg.ffn_kind, dtype=dtype)
+        p[f"slot{j}"] = blk
+    return p
+
+
+def init(key: jax.Array, cfg: ModelConfig):
+    assert cfg.n_layers % cfg.attn_every == 0, \
+        "hybrid depth must be a multiple of the period"
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_periods = cfg.n_layers // cfg.attn_every
+    ke, kp, ku = jax.random.split(key, 3)
+    pkeys = jax.random.split(kp, n_periods)
+    params = {
+        "embed": L.embed_init(ke, cfg.vocab_padded, cfg.d_model, dtype=dtype),
+        "periods": jax.vmap(partial(period_init, cfg=cfg))(pkeys),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.linear_init(ku, cfg.d_model, cfg.vocab_padded,
+                                          dtype=dtype, bias=False)
+    return params
+
+
+def _lm_head(params, x, cfg, jcfg):
+    if cfg.tie_embeddings:
+        return L.unembed_apply(params["embed"], x, jcfg)
+    from repro.core.api import head_config
+    return L.linear_apply(params["lm_head"], x, head_config(jcfg))
+
+
+def _slot_apply(blk, x, j, cfg: ModelConfig, jcfg: JigsawConfig, positions,
+                aux, state=None, pos=None):
+    """One layer inside the period. state: None (train) or the slot's
+    cache entry. Returns (x, new_state, aux)."""
+    new_state = None
+    if _slot_kind(cfg, j) == "attn":
+        kv = None if state is None else {"k": state["k"], "v": state["v"],
+                                         "pos": pos}
+        h = L.rmsnorm_apply(blk["norm"], x)
+        out, nc = L.attention_apply(
+            blk["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.d_head, positions=positions, cfg=jcfg, causal=True,
+            window=cfg.sliding_window, rope_theta=cfg.rope_theta,
+            kv_cache=kv, rolling=cfg.sliding_window is not None,
+            kv_spec=_kv_spec(cfg, jcfg) if kv is not None else None,
+            q_chunk=cfg.attn_q_chunk)
+        x = x + out
+        if nc is not None:
+            new_state = {"k": nc["k"], "v": nc["v"]}
+    else:
+        h = L.rmsnorm_apply(blk["norm"], x)
+        out, ns = L.mamba2_apply(
+            blk["ssm"], h, d_state=cfg.ssm_state, n_heads=cfg.ssm_heads,
+            head_dim=cfg.ssm_head_dim, n_groups=cfg.ssm_groups,
+            conv_kernel=cfg.ssm_conv, chunk=cfg.ssm_chunk, cfg=jcfg,
+            state=state)
+        x = x + out
+        new_state = ns
+    h = L.rmsnorm_apply(blk["ffn_norm"], x)
+    if "moe" in blk:
+        # decode (state is not None): never drop tokens (capacity >= T)
+        cf = cfg.capacity_factor if state is None else float(cfg.n_experts)
+        out, a = L.moe_apply(blk["moe"], h, top_k=cfg.top_k,
+                             capacity_factor=cf, cfg=jcfg)
+        aux = aux + a
+    else:
+        out = L.ffn_apply(blk["ffn"], h, jcfg)
+    x = x + out
+    x = constrain(x, jcfg.rules.act(x.ndim))
+    return x, new_state, aux
+
+
+def apply(params, batch, cfg: ModelConfig,
+          jcfg: JigsawConfig = DEFAULT_JIGSAW) -> Tuple[jax.Array, jax.Array]:
+    x = L.embed_apply(params["embed"], batch["tokens"])
+    b, s, _ = x.shape
+    positions = jnp.arange(s)          # 1-D: batch-free attention masks
+    x = constrain(x, jcfg.rules.act(x.ndim))
+
+    def body(carry, pp):
+        h, aux = carry
+        for j in range(cfg.attn_every):
+            h, _, aux = _slot_apply(pp[f"slot{j}"], h, j, cfg, jcfg,
+                                    positions, aux)
+        return (h, aux), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                               params["periods"])
+    x = L.rmsnorm_apply(params["final_norm"], x)
+    logits = _lm_head(params, x, cfg, jcfg)
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Per-slot cache stacked over periods.  Attention slots: KV buffers
+    (window-sized if SWA); SSM slots: O(1) conv+state buffers -- which is
+    why jamba runs long_500k."""
+    n_periods = cfg.n_layers // cfg.attn_every
+    w = cfg.sliding_window
+    s = min(max_len, w) if w is not None else max_len
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    slots = {}
+    for j in range(cfg.attn_every):
+        if _slot_kind(cfg, j) == "attn":
+            slots[f"slot{j}"] = {
+                "k": jnp.zeros((n_periods, batch_size, s, cfg.n_kv_heads,
+                                cfg.d_head), dtype),
+                "v": jnp.zeros((n_periods, batch_size, s, cfg.n_kv_heads,
+                                cfg.d_head), dtype),
+            }
+        else:
+            slots[f"slot{j}"] = {
+                "conv": jnp.zeros((n_periods, batch_size, cfg.ssm_conv - 1,
+                                   conv_dim), dtype),
+                "ssm": jnp.zeros((n_periods, batch_size, cfg.ssm_heads,
+                                  cfg.ssm_head_dim, cfg.ssm_state),
+                                 jnp.float32),
+            }
+    return {"pos": jnp.zeros((batch_size,), jnp.int32), "slots": slots}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig,
+                jcfg: JigsawConfig = DEFAULT_JIGSAW):
+    x = L.embed_apply(params["embed"], tokens)
+    pos = cache["pos"]
+    positions = pos[:, None]
+
+    def body(h, xs):
+        pp, slot_caches = xs
+        new_slots = {}
+        for j in range(cfg.attn_every):
+            h, ns, _ = _slot_apply(pp[f"slot{j}"], h, j, cfg, jcfg,
+                                   positions, jnp.float32(0.0),
+                                   state=slot_caches[f"slot{j}"], pos=pos)
+            new_slots[f"slot{j}"] = ns
+        return h, new_slots
+
+    x, new_slots = jax.lax.scan(body, x, (params["periods"],
+                                          cache["slots"]))
+    x = L.rmsnorm_apply(params["final_norm"], x)
+    logits = _lm_head(params, x, cfg, jcfg)
+    return logits, {"pos": pos + 1, "slots": new_slots}

@@ -1,0 +1,604 @@
+"""Shared neural building blocks (pure-functional, pytree params).
+
+All layers follow the convention:
+    *_init(key, ...) -> param dict
+    *_apply(params, x, ...) -> output
+
+Linear layers route through the Jigsaw API (repro.core.api) so the paper's
+parallelism is a first-class feature of every architecture.  Norms are
+computed in float32 and cast back.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import (DEFAULT_JIGSAW, JigsawConfig, linear_apply,
+                            linear_init, mlp_apply, mlp_init)
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """x: [B, S, H, hd]; positions: [B, S] or [S]. Rotates pairs (even, odd
+    halves convention, as llama)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.arange(half, dtype=jnp.float32)
+    inv = 1.0 / (theta ** (freq / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; full-causal / sliding-window / bidirectional / cross)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   d_head: int, *, dtype=jnp.float32, bias: bool = False,
+                   fused_qkv: bool = False):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": linear_init(kq, d_model, n_heads * d_head, dtype=dtype, bias=bias),
+        "wk": linear_init(kk, d_model, n_kv_heads * d_head, dtype=dtype, bias=bias),
+        "wv": linear_init(kv, d_model, n_kv_heads * d_head, dtype=dtype, bias=bias),
+        "wo": linear_init(ko, n_heads * d_head, d_model, dtype=dtype, bias=bias),
+    }
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """[B, S, Hkv, hd] -> [B, S, Hkv*n_rep, hd] grouping-compatible."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *,
+         q_pos: jax.Array, kv_pos: jax.Array, causal: bool = True,
+         window: Optional[int] = None, kv_mask: Optional[jax.Array] = None,
+         soft_cap: Optional[float] = None) -> jax.Array:
+    """Scaled dot-product attention with GQA repeat handled by caller.
+
+    q: [B, Sq, H, hd]; k, v: [B, Skv, H, hd].
+    q_pos: [B, Sq] absolute positions of queries.
+    kv_pos: [B, Skv] absolute positions of keys (cache slots may be
+            rolling for sliding-window caches).
+    kv_mask: [B, Skv] optional validity mask for cache slots.
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if soft_cap is not None:
+        scores = jnp.tanh(scores / soft_cap) * soft_cap
+    # Build the mask batch-free when positions are batch-independent
+    # ([Sq]/[Skv] 1-D) so it materializes as [Sq, Skv], not [B, Sq, Skv]
+    # -- at (B=256, S=4096) the difference is ~270 GiB/device.
+    dq = q_pos[..., :, None]            # [.., Sq, 1]
+    dk = kv_pos[..., None, :]           # [.., 1, Skv]
+    mask = None
+    if causal:
+        mask = dk <= dq
+    if window is not None:
+        m = dq - dk < window
+        mask = m if mask is None else mask & m
+    if kv_mask is not None:
+        m = jnp.broadcast_to(kv_mask[..., None, :], kv_mask.shape[:-1]
+                             + (dq.shape[-2], kv_mask.shape[-1]))
+        mask = m if mask is None else mask & m
+    if mask is not None:
+        mask = mask[None, None] if mask.ndim == 2 else mask[:, None]
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out
+
+
+def sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 q_pos: jax.Array, kv_pos: jax.Array, causal: bool = True,
+                 window=None, q_chunk: int = 512,
+                 kv_chunk: int = 1024) -> jax.Array:
+    """Memory-bounded attention: query-chunked with an online-softmax
+    scan over key/value chunks (flash-attention recurrence at the XLA
+    level).  Peak score buffer is [B, H, q_chunk, kv_chunk] instead of
+    [B, H, Sq, Skv] -- the fix for the f32 score tensors that dominated
+    the 4k-train / 32k-prefill dry-run temps (EXPERIMENTS.md #Perf).
+
+    Restrictions vs ``sdpa``: 1-D positions only (train/prefill), no
+    kv_mask / soft_cap (those paths keep the exact reference).
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    assert q_pos.ndim == 1 and kv_pos.ndim == 1
+    scale = 1.0 / math.sqrt(hd)
+    nq = -(-sq // q_chunk)
+    nk = -(-skv // kv_chunk)
+    q_pad, kv_pad = nq * q_chunk - sq, nk * kv_chunk - skv
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, q_pad), constant_values=-(2 ** 30))
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, kv_pad), constant_values=2 ** 30)
+    qc = q.reshape(b, nq, q_chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    kc = k.reshape(b, nk, kv_chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nk, kv_chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    qp = q_pos.reshape(nq, q_chunk)
+    kp = kv_pos.reshape(nk, kv_chunk)
+
+    def one_q_chunk(args):
+        qi, qpi = args                       # [B,H,Qc,hd], [Qc]
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, vi, kpi = inp
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            msk = None
+            if causal:
+                msk = kpi[None, :] <= qpi[:, None]
+            if window is not None:
+                mw = qpi[:, None] - kpi[None, :] < window
+                msk = mw if msk is None else msk & mw
+            if msk is not None:
+                s = jnp.where(msk[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vi.dtype), vi)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc, vc, kp))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.astype(q.dtype)           # [B,H,Qc,hd]
+
+    outs = jax.lax.map(jax.checkpoint(one_q_chunk), (qc, qp))  # [nq,B,H,Qc,hd]
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nq * q_chunk, h, hd)
+    return out[:, :sq]
+
+
+def attention_apply(params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
+                    d_head: int, positions: jax.Array,
+                    cfg: JigsawConfig = DEFAULT_JIGSAW,
+                    causal: bool = True, window: Optional[int] = None,
+                    rope_theta: Optional[float] = 10000.0,
+                    soft_cap: Optional[float] = None,
+                    kv_cache: Optional[dict] = None,
+                    rolling: bool = False,
+                    kv_spec=None,
+                    x_kv: Optional[jax.Array] = None,
+                    qk_norm: Optional[dict] = None,
+                    q_chunk: int = 0) -> Tuple[jax.Array, Optional[dict]]:
+    """General attention layer.
+
+    Training/prefill: x [B, S, D], positions [B, S], kv_cache None.
+    Decode: x [B, 1, D]; kv_cache = {"k": [B, S_max, Hkv, hd], "v": ...,
+            "pos": [B] next write offset}; returns updated cache.
+    Cross-attention: pass x_kv (encoder states); no cache, no causal.
+    """
+    b, s, _ = x.shape
+    xkv = x if x_kv is None else x_kv
+    q = linear_apply(params["wq"], x, cfg).reshape(b, s, n_heads, d_head)
+    k = linear_apply(params["wk"], xkv, cfg).reshape(b, xkv.shape[1], n_kv_heads, d_head)
+    v = linear_apply(params["wv"], xkv, cfg).reshape(b, xkv.shape[1], n_kv_heads, d_head)
+
+    if qk_norm is not None:
+        q = rmsnorm_apply(qk_norm["q"], q)
+        k = rmsnorm_apply(qk_norm["k"], k)
+
+    if rope_theta is not None and x_kv is None:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        # Decode step: append k,v at (rolling) slot, attend over the cache.
+        s_max = kv_cache["k"].shape[1]
+        pos = kv_cache["pos"]                         # [B]
+        slot = pos % s_max if rolling else jnp.minimum(pos, s_max - 1)
+        bidx = jnp.arange(b)
+        ck = jax.lax.stop_gradient(kv_cache["k"])
+        cv = jax.lax.stop_gradient(kv_cache["v"])
+        ck = ck.at[bidx, slot].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[bidx, slot].set(v[:, 0].astype(cv.dtype))
+        # absolute positions of cache slots
+        slot_idx = jnp.arange(s_max)[None, :]
+        if rolling:
+            # rolling window cache: slot i holds absolute position
+            # pos - ((slot - i) % s_max)
+            kv_pos = pos[:, None] - ((slot[:, None] - slot_idx) % s_max)
+        else:
+            kv_pos = jnp.broadcast_to(slot_idx, (b, s_max))
+        kv_mask = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+        if kv_spec is not None:
+            # pin the cache layout through the update + repeat: without
+            # this GSPMD "involuntarily rematerializes" (fully gathers)
+            # an S-sharded cache to reshard it by heads -- 80 GiB/step
+            # for dbrx decode_32k.  Keeping S sharded makes the softmax
+            # a flash-decoding partial reduction instead.
+            from repro.core.sharding import constrain as _constrain
+            ck = _constrain(ck, kv_spec)
+            cv = _constrain(cv, kv_spec)
+        kk = _repeat_kv(ck.astype(q.dtype), n_heads // n_kv_heads)
+        vv = _repeat_kv(cv.astype(q.dtype), n_heads // n_kv_heads)
+        if kv_spec is not None:
+            from repro.core.sharding import constrain as _constrain
+            kk = _constrain(kk, kv_spec)
+            vv = _constrain(vv, kv_spec)
+        out = sdpa(q, kk, vv, q_pos=positions, kv_pos=kv_pos, causal=True,
+                   window=window, kv_mask=kv_mask, soft_cap=soft_cap)
+        new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+    else:
+        kk = _repeat_kv(k, n_heads // n_kv_heads)
+        vv = _repeat_kv(v, n_heads // n_kv_heads)
+        kv_positions = positions if x_kv is None else \
+            jnp.arange(xkv.shape[1])
+        if q_chunk and positions.ndim == 1 and soft_cap is None:
+            # beyond-paper: online-softmax chunked attention (see #Perf)
+            out = sdpa_chunked(q, kk, vv, q_pos=positions,
+                               kv_pos=kv_positions,
+                               causal=causal and x_kv is None,
+                               window=window, q_chunk=q_chunk)
+        else:
+            out = sdpa(q, kk, vv, q_pos=positions, kv_pos=kv_positions,
+                       causal=causal and x_kv is None, window=window,
+                       soft_cap=soft_cap)
+
+    out = out.reshape(b, s, n_heads * d_head)
+    out = linear_apply(params["wo"], out, cfg)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward variants
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d_model: int, d_ff: int, *, kind: str = "swiglu",
+             dtype=jnp.float32, bias: bool = False):
+    if kind == "swiglu":
+        kg, ku, kd = jax.random.split(key, 3)
+        return {"gate": linear_init(kg, d_model, d_ff, dtype=dtype, bias=bias),
+                "up": linear_init(ku, d_model, d_ff, dtype=dtype, bias=bias),
+                "down": linear_init(kd, d_ff, d_model, dtype=dtype, bias=bias)}
+    if kind == "gelu":
+        return mlp_init(key, d_model, d_ff, d_model, dtype=dtype, bias=bias)
+    raise ValueError(kind)
+
+
+def ffn_apply(params, x, cfg: JigsawConfig = DEFAULT_JIGSAW):
+    if "gate" in params:
+        g = linear_apply(params["gate"], x, cfg)
+        u = linear_apply(params["up"], x, cfg)
+        h = jax.nn.silu(g) * u
+        return linear_apply(params["down"], h, cfg)
+    return mlp_apply({"fc1": params["fc1"], "fc2": params["fc2"]}, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k router, capacity-based einsum dispatch; GShard
+# style so expert parallelism lowers to all-to-all-like collectives)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, *,
+             kind: str = "swiglu", dtype=jnp.float32):
+    kr, ke = jax.random.split(key)
+    router = linear_init(kr, d_model, n_experts, dtype=jnp.float32, bias=False)
+    scale = 1.0 / math.sqrt(d_model)
+    keys = jax.random.split(ke, 3)
+    if kind == "swiglu":
+        experts = {
+            "gate": jax.random.normal(keys[0], (n_experts, d_ff, d_model)) * scale,
+            "up": jax.random.normal(keys[1], (n_experts, d_ff, d_model)) * scale,
+            "down": jax.random.normal(keys[2], (n_experts, d_model, d_ff))
+                    * (1.0 / math.sqrt(d_ff)),
+        }
+    else:
+        experts = {
+            "fc1": jax.random.normal(keys[0], (n_experts, d_ff, d_model)) * scale,
+            "fc2": jax.random.normal(keys[1], (n_experts, d_model, d_ff))
+                   * (1.0 / math.sqrt(d_ff)),
+        }
+    experts = {k: v.astype(dtype) for k, v in experts.items()}
+    return {"router": router, "experts": experts}
+
+
+def moe_apply(params, x: jax.Array, *, top_k: int, capacity_factor: float = 1.25,
+              cfg: JigsawConfig = DEFAULT_JIGSAW,
+              group_size: int = 1024) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss).  x: [B, S, D].
+
+    GShard-style *grouped* dispatch: tokens are split into groups of
+    ``group_size`` and routed independently within each group with
+    per-group capacity C = cf*k*group/E, so the dispatch one-hot is
+    [G, group, E, C] -- LINEAR in total tokens.  (An ungrouped [T, E, C]
+    dispatch is quadratic in T and produced ~2.7 TiB/device temps in the
+    first dbrx train_4k dry-run.)  Groups follow token order, so the
+    group dim inherits the batch sharding; with experts sharded over the
+    model axis the dispatch einsum is the expert-parallel all-to-all.
+    """
+    b, s, d = x.shape
+    e = params["router"]["w"].shape[0]
+    t = b * s
+    xt = x.reshape(t, d)
+    gs = min(group_size, t)
+    pad = (-t) % gs
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    g = xt.shape[0] // gs
+    xg = xt.reshape(g, gs, d)
+
+    logits = linear_apply(params["router"], xg.astype(jnp.float32),
+                          cfg.replace(scheme="none"))          # [G, gs, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)           # [G, gs, k]
+    # normalize selected gates (dbrx/mixtral convention)
+    gate_vals = gate_vals / jnp.clip(jnp.sum(gate_vals, -1, keepdims=True),
+                                     1e-9)
+
+    capacity = max(1, int(capacity_factor * top_k * gs / e))
+    # position of each (token, k) within its expert's per-group buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)      # [G, gs, k, E]
+    flat = onehot.reshape(g, gs * top_k, e)
+    pos_in_exp = (jnp.cumsum(flat, axis=1) - flat).reshape(g, gs, top_k, e)
+    pos = jnp.sum(pos_in_exp * onehot, axis=-1)                 # [G, gs, k]
+    keep = pos < capacity
+
+    # load-balance auxiliary loss (Switch/GShard), global over all groups
+    me = jnp.mean(probs, axis=(0, 1))                           # [E]
+    ce = jnp.mean(jnp.sum(onehot, axis=2).astype(jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    # dispatch/combine [G, gs, E, C], accumulated per routing slot k so the
+    # 5-D [G, gs, k, E, C] intermediate never materializes
+    dispatch = jnp.zeros((g, gs, e, capacity), x.dtype)
+    combine = jnp.zeros((g, gs, e, capacity), x.dtype)
+    for kk in range(top_k):
+        term = (jax.nn.one_hot(gate_idx[..., kk], e, dtype=x.dtype)[..., None]
+                * jax.nn.one_hot(pos[..., kk], capacity,
+                                 dtype=x.dtype)[..., None, :])
+        term = term * keep[..., kk, None, None].astype(x.dtype)
+        dispatch = dispatch + term
+        combine = combine + term * gate_vals[..., kk, None, None].astype(
+            x.dtype)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg)             # [G, E, C, D]
+    w = params["experts"]
+    if "gate" in w:
+        gt = jnp.einsum("gecd,efd->gecf", xe, w["gate"])
+        u = jnp.einsum("gecd,efd->gecf", xe, w["up"])
+        h = jax.nn.silu(gt) * u
+        ye = jnp.einsum("gecf,edf->gecd", h, w["down"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,efd->gecf", xe, w["fc1"]))
+        ye = jnp.einsum("gecf,edf->gecd", h, w["fc2"])
+    yt = jnp.einsum("gtec,gecd->gtd", combine, ye)              # [G, gs, D]
+    yt = yt.reshape(g * gs, d)
+    if pad:
+        yt = yt[:t]
+    return yt.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD — state-space duality, arXiv:2405.21060)
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, d_model: int, *, d_state: int = 128, n_heads: int = 24,
+                head_dim: int = 64, conv_kernel: int = 4, n_groups: int = 1,
+                expand: int = 2, dtype=jnp.float32):
+    d_inner = n_heads * head_dim
+    assert d_inner == expand * d_model, \
+        f"mamba2: n_heads*head_dim ({d_inner}) must equal expand*d_model"
+    conv_dim = d_inner + 2 * n_groups * d_state
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # The input projection is SPLIT into its [z | xBC | dt] slices: the
+    # fused width (2*d_inner + 2*g*N + H = e.g. 3352) is not divisible by
+    # the 16-way model axis, which forced GSPMD to complete the matmul
+    # with a full [B,S,3352] f32 ALLREDUCE (2x19.6 GiB/step for
+    # mamba2-130m train_4k, EXPERIMENTS.md #Perf D).  The z and xBC
+    # widths shard evenly; the tiny dt head (H cols) replicates.
+    p = {
+        "in_z": linear_init(k1, d_model, d_inner, dtype=dtype, bias=False),
+        "in_xbc": linear_init(k5, d_model, conv_dim, dtype=dtype,
+                              bias=False),
+        "in_dt": linear_init(k6, d_model, n_heads, dtype=dtype,
+                             bias=False),
+        "conv_w": (jax.random.normal(k2, (conv_kernel, conv_dim))
+                   * (1.0 / math.sqrt(conv_kernel))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": linear_init(k3, d_inner, d_model, dtype=dtype, bias=False),
+    }
+    return p
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD chunked scan (Mamba-2 Listing-style, pure jnp).
+
+    x: [b, s, h, p]; dt: [b, s, h] (post-softplus); A: [h] (negative);
+    B, C: [b, s, g, n] with g groups broadcast to h.
+    Returns y: [b, s, h, p] and final state [b, h, p, n].
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)      # [b, s, h, n]
+    Ch = jnp.repeat(C, rep, axis=2)
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+
+    def ck(t):  # [b, s, ...] -> [b, nc, chunk, ...]
+        return t.reshape((b, nc, chunk) + t.shape[2:])
+
+    xc, dtc, Bc, Cc = ck(x), ck(dt), ck(Bh), ck(Ch)
+    dA = dtc * A[None, None, None, :]                       # [b,nc,l,h] (<=0)
+    dA_cum = jnp.cumsum(dA, axis=2)                         # within-chunk
+    # intra-chunk (the "attention-like" quadratic term)
+    # L[i,j] = exp(dA_cum[i] - dA_cum[j]) for i >= j
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]   # [b,nc,l,l,h]
+    li = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(li[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bzihn,bzjhn->bzijh", Cc, Bc)           # [b,nc,l,l,h]
+    att = CB * L * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bzijh,bzjhp->bzihp", att, xc)
+
+    # chunk states: sum_j exp(dA_cum[end] - dA_cum[j]) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # [b,nc,l,h]
+    states = jnp.einsum("bzlh,bzlhn,bzlhp->bzhpn",
+                        decay_to_end * dtc, Bc, xc)         # [b,nc,h,p,n]
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])              # [b,nc,h]
+
+    def scan_fn(h_prev, inp):
+        dec, st = inp
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((b, h, p, n), x.dtype)
+    hT, h_prevs = jax.lax.scan(
+        scan_fn, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                   # [b,nc,h,p,n]
+    # contribution of carried state to each position
+    state_decay = jnp.exp(dA_cum)                           # [b,nc,l,h]
+    y_inter = jnp.einsum("bzlhn,bzhpn,bzlh->bzlhp", Cc, h_prevs, state_decay)
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    return y, hT
+
+
+def mamba2_apply(params, x: jax.Array, *, d_state: int, n_heads: int,
+                 head_dim: int, n_groups: int = 1, conv_kernel: int = 4,
+                 chunk: int = 64, cfg: JigsawConfig = DEFAULT_JIGSAW,
+                 state: Optional[dict] = None) -> Tuple[jax.Array, Optional[dict]]:
+    """Mamba-2 mixer.  Train/prefill: state=None. Decode: state dict with
+    {"conv": [B, K-1, conv_dim], "ssm": [B, H, P, N]} -> returns updated."""
+    b, s, d = x.shape
+    d_inner = n_heads * head_dim
+    z = linear_apply(params["in_z"], x, cfg)
+    xBC = linear_apply(params["in_xbc"], x, cfg)
+    dt = linear_apply(params["in_dt"], x, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+
+    new_state = None
+    if state is None:
+        # causal depthwise conv over sequence
+        cw = params["conv_w"]                                # [K, conv_dim]
+        k = cw.shape[0]
+        xp = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+        conv = sum(xp[:, i:i + s, :] * cw[i][None, None, :] for i in range(k))
+        xBC = jax.nn.silu(conv + params["conv_b"][None, None, :])
+        xs, B, C = jnp.split(xBC, [d_inner, d_inner + n_groups * d_state],
+                             axis=-1)
+        xs = xs.reshape(b, s, n_heads, head_dim)
+        B = B.reshape(b, s, n_groups, d_state)
+        C = C.reshape(b, s, n_groups, d_state)
+        y, _ = _ssd_chunked(xs.astype(jnp.float32), dt, A,
+                            B.astype(jnp.float32), C.astype(jnp.float32),
+                            chunk)
+        y = y + xs.astype(jnp.float32) * params["D"][None, None, :, None]
+    else:
+        # single-token decode
+        cw = params["conv_w"]
+        k = cw.shape[0]
+        conv_state = state["conv"]                           # [B, K-1, conv]
+        window = jnp.concatenate([conv_state, xBC], axis=1)  # [B, K, conv]
+        conv = jnp.einsum("bkc,kc->bc", window, cw)[:, None, :]
+        xBC = jax.nn.silu(conv + params["conv_b"][None, None, :])
+        xs, B, C = jnp.split(xBC, [d_inner, d_inner + n_groups * d_state],
+                             axis=-1)
+        xs = xs.reshape(b, 1, n_heads, head_dim).astype(jnp.float32)
+        B = B.reshape(b, 1, n_groups, d_state).astype(jnp.float32)
+        C = C.reshape(b, 1, n_groups, d_state).astype(jnp.float32)
+        rep = n_heads // n_groups
+        Bh = jnp.repeat(B[:, 0], rep, axis=1)                # [B, H, N]
+        Ch = jnp.repeat(C[:, 0], rep, axis=1)
+        dA = jnp.exp(dt[:, 0, :] * A[None, :])               # [B, H]
+        ssm = state["ssm"].astype(jnp.float32)               # [B, H, P, N]
+        upd = jnp.einsum("bh,bhn,bhp->bhpn", dt[:, 0], Bh, xs[:, 0])
+        ssm_new = ssm * dA[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhpn->bhp", Ch, ssm_new)[:, None]
+        y = y + xs * params["D"][None, None, :, None]
+        new_state = {"conv": window[:, 1:], "ssm": ssm_new.astype(state["ssm"].dtype)}
+
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm_apply(params["norm"], y)
+    out = linear_apply(params["out_proj"], y, cfg)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    tbl = jax.random.normal(key, (vocab, d_model)) * (1.0 / math.sqrt(d_model))
+    return {"table": tbl.astype(dtype)}
+
+
+def embed_apply(params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed_apply(params_embed, x: jax.Array,
+                  cfg: JigsawConfig = DEFAULT_JIGSAW) -> jax.Array:
+    """Tied LM head: logits = x @ table.T (a Jigsaw linear over d_model).
+    Uses the GSPMD head config -- see api.head_config for why."""
+    from repro.core.api import head_config
+    return linear_apply({"w": params_embed["table"]}, x, head_config(cfg))

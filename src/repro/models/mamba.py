@@ -1,0 +1,100 @@
+"""mamba2-130m: attention-free SSM LM (SSD, arXiv:2405.21060).
+
+§Arch-applicability (DESIGN.md): Jigsaw applies to the in/out projections
+(the bulk of the FLOPs); the SSD scan itself is a recurrence, not a
+matmul, so it is sharded over SSM heads on the model axis rather than over
+the sequence (domain) -- a documented deviation forced by causality.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.api import DEFAULT_JIGSAW, JigsawConfig
+from repro.core.sharding import constrain
+from repro.models import layers as L
+
+
+def layer_init(key: jax.Array, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": L.rmsnorm_init(cfg.d_model),
+        "mixer": L.mamba2_init(key, cfg.d_model, d_state=cfg.ssm_state,
+                               n_heads=cfg.ssm_heads,
+                               head_dim=cfg.ssm_head_dim,
+                               conv_kernel=cfg.ssm_conv,
+                               n_groups=cfg.ssm_groups,
+                               expand=cfg.ssm_expand, dtype=dtype),
+    }
+
+
+def init(key: jax.Array, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": L.embed_init(ke, cfg.vocab_padded, cfg.d_model, dtype=dtype),
+        "layers": jax.vmap(partial(layer_init, cfg=cfg))(layer_keys),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+
+
+def _mixer(lp, x, cfg: ModelConfig, jcfg: JigsawConfig, state=None):
+    h = L.rmsnorm_apply(lp["norm"], x)
+    out, new_state = L.mamba2_apply(
+        lp["mixer"], h, d_state=cfg.ssm_state, n_heads=cfg.ssm_heads,
+        head_dim=cfg.ssm_head_dim, n_groups=cfg.ssm_groups,
+        conv_kernel=cfg.ssm_conv, chunk=cfg.ssm_chunk, cfg=jcfg,
+        state=state)
+    return x + out, new_state
+
+
+def apply(params, batch, cfg: ModelConfig,
+          jcfg: JigsawConfig = DEFAULT_JIGSAW) -> Tuple[jax.Array, jax.Array]:
+    x = L.embed_apply(params["embed"], batch["tokens"])
+    x = constrain(x, jcfg.rules.act(x.ndim))
+
+    def body(h, lp):
+        h, _ = _mixer(lp, h, cfg, jcfg)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    x = L.rmsnorm_apply(params["final_norm"], x)
+    logits = L.unembed_apply(params["embed"], x, jcfg)
+    return logits, jnp.float32(0.0)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """SSM state is O(1) in sequence length -- the whole point of running
+    long_500k on this family."""
+    del max_len
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "pos": jnp.zeros((batch_size,), jnp.int32),
+        "conv": jnp.zeros((cfg.n_layers, batch_size, cfg.ssm_conv - 1,
+                           conv_dim), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch_size, cfg.ssm_heads,
+                          cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    }
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig,
+                jcfg: JigsawConfig = DEFAULT_JIGSAW):
+    x = L.embed_apply(params["embed"], tokens)
+
+    def body(h, xs):
+        lp, conv, ssm = xs
+        h, ns = _mixer(lp, h, cfg, jcfg, state={"conv": conv, "ssm": ssm})
+        return h, (ns["conv"], ns["ssm"])
+
+    x, (conv, ssm) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["ssm"]))
+    x = L.rmsnorm_apply(params["final_norm"], x)
+    logits = L.unembed_apply(params["embed"], x, jcfg)
+    return logits, {"pos": cache["pos"] + 1, "conv": conv, "ssm": ssm}

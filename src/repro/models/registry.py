@@ -1,0 +1,45 @@
+"""Architecture registry: family -> model module dispatch."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.api import JigsawConfig
+from repro.models import encdec, hybrid, mamba, transformer, weathermixer
+
+_FAMILY_MODULE = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba,
+    "hybrid": hybrid,
+    "audio": encdec,
+    "mixer": weathermixer,
+}
+
+
+def module_for(cfg: ModelConfig):
+    return _FAMILY_MODULE[cfg.family]
+
+
+def init(key: jax.Array, cfg: ModelConfig):
+    return module_for(cfg).init(key, cfg)
+
+
+def apply(params, batch, cfg: ModelConfig, jcfg: JigsawConfig, **kw):
+    return module_for(cfg).apply(params, batch, cfg, jcfg, **kw)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16):
+    mod = module_for(cfg)
+    if not hasattr(mod, "init_cache"):
+        raise ValueError(f"{cfg.arch_id} ({cfg.family}) has no decode path")
+    return mod.init_cache(cfg, batch_size, max_len, dtype)
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, jcfg: JigsawConfig):
+    return module_for(cfg).decode_step(params, cache, tokens, cfg, jcfg)

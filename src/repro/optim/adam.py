@@ -1,0 +1,84 @@
+"""Adam/AdamW from scratch (no optax in this environment).
+
+Optimizer states inherit the parameters' sharding (the paper's zero
+redundancy: "each GPU holds 1/n of the total parameters, optimizer states
+and input sample").  ``state_dtype`` lets the launcher trade moment
+precision for memory on the very large archs (DESIGN.md: jamba-398b
+training fits a single pod only with bf16 moments).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    state_dtype: Optional[str] = None    # None -> same as param dtype
+    grad_clip: Optional[float] = 1.0     # global-norm clip (paper: 1.0)
+
+
+def init(params, cfg: AdamConfig):
+    def zeros_like(p):
+        dt = jnp.dtype(cfg.state_dtype) if cfg.state_dtype else p.dtype
+        return jnp.zeros(p.shape, dt)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros_like, params),
+        "nu": jax.tree.map(zeros_like, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def update(params, grads, state, lr: jax.Array, cfg: AdamConfig
+           ) -> Tuple[Any, Any]:
+    """One AdamW step. lr may be a traced scalar (schedule)."""
+    if cfg.grad_clip is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        gf = g.astype(jnp.float32)
+        mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * gf
+        nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mu_n / c1
+        vhat = nu_n / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_n = p.astype(jnp.float32) - lr * delta
+        return (p_n.astype(p.dtype), mu_n.astype(mu.dtype),
+                nu_n.astype(nu.dtype))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, {"step": step, "mu": new_mu, "nu": new_nu}

@@ -1,0 +1,23 @@
+"""LR schedules (paper §6: linear warm-up then cosine decay to 1e-5)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, base_lr: float = 1e-4, warmup_steps: int = 1000,
+                  total_steps: int = 100_000, min_lr: float = 1e-5,
+                  init_lr: float = 1e-6):
+    """The paper's schedule: ramped linear warm-up from init_lr to base_lr
+    over the first epoch, cosine anneal to min_lr afterwards."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = init_lr + (base_lr - init_lr) * jnp.minimum(
+        step / jnp.maximum(warmup_steps, 1), 1.0)
+    t = jnp.clip((step - warmup_steps) /
+                 jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_lr + 0.5 * (base_lr - min_lr) * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def constant(step, *, base_lr: float = 1e-4):
+    del step
+    return jnp.float32(base_lr)

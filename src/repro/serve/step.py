@@ -1,0 +1,69 @@
+"""Serving: prefill + batched decode steps.
+
+``make_serve_step`` builds the single-token decode function the
+decode_32k / long_500k dry-run shapes lower (one new token against a
+seq_len-sized cache), and ``generate`` drives it for the runnable
+examples.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.api import JigsawConfig
+from repro.models import registry as M
+
+
+def make_serve_step(cfg: ModelConfig, jcfg: JigsawConfig,
+                    greedy: bool = True):
+    """Returns serve_step(params, cache, tokens[B,1]) ->
+    (next_tokens [B,1], cache)."""
+
+    def serve_step(params, cache, tokens):
+        logits, cache = M.decode_step(params, cache, tokens, cfg, jcfg)
+        # mask vocab padding before sampling
+        logits = logits[..., : cfg.vocab_size]
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step
+
+
+def prefill(params, prompts: jax.Array, cfg: ModelConfig,
+            jcfg: JigsawConfig, max_len: int, cache_dtype=jnp.bfloat16,
+            extra_batch: Optional[dict] = None):
+    """Fill a fresh cache by decoding the prompt token-by-token.
+
+    (A fused prefill via ``apply`` + cache write-back is the production
+    path on TPU; token-wise prefill keeps the CPU example simple and
+    exercises the same decode_step the dry-run lowers.)
+    """
+    b, s = prompts.shape
+    cache = M.init_cache(cfg, b, max_len, dtype=cache_dtype)
+    if cfg.family == "audio" and extra_batch is not None:
+        from repro.models import encdec
+        cache["enc"] = encdec.encode(params, extra_batch["frames"], cfg,
+                                     jcfg).astype(cache["enc"].dtype)
+    step = make_serve_step(cfg, jcfg)
+    last = prompts[:, :1]
+    for t in range(s):
+        last, cache = step(params, cache, prompts[:, t:t + 1])
+    return last, cache
+
+
+def generate(params, prompts: jax.Array, cfg: ModelConfig,
+             jcfg: JigsawConfig, *, steps: int, max_len: int,
+             extra_batch: Optional[dict] = None) -> jax.Array:
+    """Greedy generation: prefill then ``steps`` decode steps."""
+    nxt, cache = prefill(params, prompts, cfg, jcfg, max_len,
+                         extra_batch=extra_batch)
+    step = jax.jit(make_serve_step(cfg, jcfg))
+    out = [nxt]
+    for _ in range(steps - 1):
+        nxt, cache = step(params, cache, nxt)
+        out.append(nxt)
+    return jnp.concatenate(out, axis=1)

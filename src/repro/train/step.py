@@ -1,0 +1,71 @@
+"""Train-step builders: loss -> grad -> clip -> Adam, per architecture
+family.  Gradient reduction over the data/pod axes is implicit in SPMD
+(params replicated over those axes), matching the paper's `r % n`
+grouping: only same-shard ranks reduce together.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.api import JigsawConfig
+from repro.models import registry as M
+from repro.optim import adam, schedule as sched
+from repro.train import loss as losses
+
+AUX_WEIGHT = 0.01   # MoE load-balance loss weight
+
+
+def loss_fn(params, batch, cfg: ModelConfig, jcfg: JigsawConfig,
+            rollout: int = 1):
+    """Returns (scalar loss, metrics dict)."""
+    if cfg.family == "mixer":
+        pred, aux = M.apply(params, batch, cfg, jcfg, rollout=rollout)
+        lat_w = losses.latitude_weights(cfg.wm_lat)
+        chan_w = losses.pressure_level_weights(cfg.wm_channels) \
+            if cfg.wm_channels >= 69 else None
+        main = losses.weighted_mse(pred, batch["target"], lat_w, chan_w)
+        return main, {"loss": main, "mse": main}
+    logits, aux = M.apply(params, batch, cfg, jcfg)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        # drop the vision-prefix positions; predict text only
+        logits = logits[:, -labels.shape[1]:]
+    nll = losses.lm_cross_entropy(logits, labels, cfg.vocab_size,
+                                  mask=batch.get("mask"))
+    total = nll + AUX_WEIGHT * aux
+    return total, {"loss": total, "nll": nll, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, jcfg: JigsawConfig,
+                    adam_cfg: adam.AdamConfig = adam.AdamConfig(),
+                    lr_fn: Callable = None, rollout: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``rollout`` > 1 enables the paper's randomized-rollout fine-tuning
+    (mixer only): the processor runs ``rollout`` times per update.
+    """
+    lr_fn = lr_fn or partial(sched.warmup_cosine)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg, jcfg, rollout)
+        lr = lr_fn(opt_state["step"])
+        new_params, new_opt = adam.update(params, grads, opt_state, lr,
+                                          adam_cfg)
+        metrics = dict(metrics, lr=lr,
+                       grad_norm=adam.global_norm(grads))
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, jcfg: JigsawConfig, rollout: int = 1):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch, cfg, jcfg, rollout)
+        return metrics
+    return eval_step

@@ -1,0 +1,59 @@
+"""Data pipeline: the domain-parallel loading invariant (paper §5) --
+``sample_shard`` == full sample sliced -- plus determinism properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.tokens import TokenDataConfig, TokenDataset
+from repro.data.weather import WeatherDataConfig, WeatherDataset
+
+CFG = WeatherDataConfig(lat=16, lon=32, channels=6, seed=7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(step=st.integers(0, 5),
+       lon0=st.integers(0, 3), nlon=st.integers(1, 4),
+       ch0=st.integers(0, 2), nch=st.integers(1, 3))
+def test_weather_shard_equals_full_slice(step, lon0, nlon, ch0, nch):
+    """Every model-parallel rank's partitioned read is bit-identical to
+    slicing the full sample -- the paper's data-loading correctness."""
+    ds = WeatherDataset(CFG)
+    lon_sl = slice(lon0 * 8, lon0 * 8 + nlon * 8)
+    ch_sl = slice(ch0, ch0 + nch)
+    full = ds.sample_batch(step, 2)
+    shard = ds.sample_shard(step, 2, lon_slice=lon_sl, chan_slice=ch_sl)
+    np.testing.assert_array_equal(shard["fields"],
+                                  full["fields"][:, :, lon_sl, ch_sl])
+    np.testing.assert_array_equal(shard["target"],
+                                  full["target"][:, :, lon_sl, ch_sl])
+
+
+def test_weather_deterministic_and_distinct():
+    ds = WeatherDataset(CFG)
+    a = ds.sample_batch(3, 2)
+    b = ds.sample_batch(3, 2)
+    c = ds.sample_batch(4, 2)
+    np.testing.assert_array_equal(a["fields"], b["fields"])
+    assert not np.allclose(a["fields"], c["fields"])
+    # target differs from input (there is something to learn)
+    assert not np.allclose(a["fields"], a["target"])
+
+
+def test_weather_io_bytes_model():
+    ds = WeatherDataset(CFG)
+    full = ds.io_bytes_per_rank(4, 1)
+    quarter = ds.io_bytes_per_rank(4, 4)
+    assert full == 4 * quarter  # domain parallelism divides I/O by n
+
+
+def test_tokens_deterministic_learnable():
+    ds = TokenDataset(TokenDataConfig(vocab_size=97, seq_len=64, seed=1))
+    a = ds.sample_batch(0, 4)
+    b = ds.sample_batch(0, 4)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (4, 64)
+    assert a["labels"].shape == (4, 64)
+    # the affine-walk structure: most next-tokens follow (31x+17) % V
+    pred = (a["tokens"] * 31 + 17) % 97
+    frac = (pred == a["labels"]).mean()
+    assert frac > 0.8
+    assert a["tokens"].max() < 97 and a["tokens"].min() >= 0

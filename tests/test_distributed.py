@@ -1,0 +1,32 @@
+"""Distributed Jigsaw correctness, run in subprocesses (each with 16
+host-emulated devices so XLA_FLAGS never leaks into other tests)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SCRIPT = os.path.join(HERE, "dist_scenarios.py")
+
+SCENARIOS = [
+    "jigsaw_1d",
+    "jigsaw_1d_fsdp",
+    "jigsaw_2d",
+    "ring_collectives",
+    "weathermixer_schemes",
+    "transformer_1d",
+    "train_step_mesh",
+]
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_scenario(scenario):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env.pop("JAX_PLATFORMS", None)
+    res = subprocess.run(
+        [sys.executable, SCRIPT, scenario], env=env,
+        capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0 and "ALL-OK" in res.stdout, (
+        f"\nstdout:\n{res.stdout[-3000:]}\nstderr:\n{res.stderr[-3000:]}")

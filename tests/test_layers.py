@@ -1,0 +1,234 @@
+"""Layer-level unit + property tests: SSD scan vs naive recurrence, MoE
+dispatch invariants, attention masking, RoPE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.api import JigsawConfig
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(0)
+NONE = JigsawConfig(scheme="none")
+
+
+# ---------------- SSD (mamba2) ----------------
+
+def naive_ssm(x, dt, A, B, C):
+    """Reference O(S*N) sequential recurrence:
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = C_t . h_t."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    rep = h // B.shape[2]
+    Bh = np.repeat(np.asarray(B), rep, axis=2)
+    Ch = np.repeat(np.asarray(C), rep, axis=2)
+    x, dt, A = map(np.asarray, (x, dt, A))
+    ht = np.zeros((b, h, p, n))
+    ys = np.zeros((b, s, h, p))
+    for t in range(s):
+        dA = np.exp(dt[:, t] * A[None, :])                  # [b, h]
+        upd = np.einsum("bh,bhn,bhp->bhpn", dt[:, t], Bh[:, t], x[:, t])
+        ht = ht * dA[:, :, None, None] + upd
+        ys[:, t] = np.einsum("bhn,bhpn->bhp", Ch[:, t], ht)
+    return ys, ht
+
+
+@pytest.mark.parametrize("s,chunk", [(16, 4), (24, 8), (7, 4)])
+def test_ssd_chunked_equals_naive(s, chunk):
+    b, h, p, n, g = 2, 4, 8, 16, 2
+    k = jax.random.split(KEY, 5)
+    x = jax.random.normal(k[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(k[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(k[2], (h,)) * 0.5)
+    B = jax.random.normal(k[3], (b, s, g, n)) * 0.3
+    C = jax.random.normal(k[4], (b, s, g, n)) * 0.3
+    y, hT = L._ssd_chunked(x, dt, A, B, C, chunk)
+    y_ref, h_ref = naive_ssm(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_mamba2_decode_matches_train():
+    """Token-by-token decode == full-sequence (chunked) forward."""
+    d_model, heads, hd, state, g = 32, 4, 16, 8, 2
+    params = L.mamba2_init(KEY, d_model, d_state=state, n_heads=heads,
+                           head_dim=hd, n_groups=g, expand=2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, d_model)) * 0.5
+    full, _ = L.mamba2_apply(params, x, d_state=state, n_heads=heads,
+                             head_dim=hd, n_groups=g, chunk=4, cfg=NONE)
+    conv_dim = heads * hd + 2 * g * state
+    st_ = {"conv": jnp.zeros((2, 3, conv_dim)),
+           "ssm": jnp.zeros((2, heads, hd, state))}
+    outs = []
+    for t in range(10):
+        o, st_ = L.mamba2_apply(params, x[:, t:t + 1], d_state=state,
+                                n_heads=heads, head_dim=hd, n_groups=g,
+                                cfg=NONE, state=st_)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------- MoE ----------------
+
+def test_moe_output_shape_and_aux():
+    p = L.moe_init(KEY, 32, 64, 4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
+    y, aux = L.moe_apply(p, x, top_k=2, cfg=NONE)
+    assert y.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-3  # load-balance loss lower bound is 1
+
+
+def test_moe_capacity_drops_tokens():
+    """With tiny capacity some tokens get zero output (dropped)."""
+    p = L.moe_init(KEY, 16, 32, 4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 16))
+    y_full, _ = L.moe_apply(p, x, top_k=1, capacity_factor=8.0, cfg=NONE)
+    y_tiny, _ = L.moe_apply(p, x, top_k=1, capacity_factor=0.1, cfg=NONE)
+    zero_rows = np.asarray(jnp.all(y_tiny == 0, axis=-1)).mean()
+    assert zero_rows > 0.3
+    assert not np.allclose(np.asarray(y_full), np.asarray(y_tiny))
+
+
+def test_moe_single_expert_equals_dense():
+    """1 expert, top-1, ample capacity == plain FFN with that expert."""
+    p = L.moe_init(KEY, 16, 32, 1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    y, _ = L.moe_apply(p, x, top_k=1, capacity_factor=4.0, cfg=NONE)
+    w = p["experts"]
+    h = jax.nn.silu(jnp.einsum("bsd,fd->bsf", x, w["gate"][0])) * \
+        jnp.einsum("bsd,fd->bsf", x, w["up"][0])
+    want = jnp.einsum("bsf,df->bsd", h, w["down"][0])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)
+
+
+# ---------------- attention ----------------
+
+def test_causal_mask():
+    """Future tokens must not influence logits."""
+    params = L.attention_init(KEY, 32, 4, 2, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 32))
+    pos = jnp.arange(8)
+    out1, _ = L.attention_apply(params, x, n_heads=4, n_kv_heads=2,
+                                d_head=8, positions=pos, cfg=NONE)
+    x2 = x.at[:, -1].set(99.0)  # perturb the last token
+    out2, _ = L.attention_apply(params, x2, n_heads=4, n_kv_heads=2,
+                                d_head=8, positions=pos, cfg=NONE)
+    np.testing.assert_allclose(np.asarray(out1[:, :-1]),
+                               np.asarray(out2[:, :-1]), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_sliding_window_equals_full_for_large_window():
+    params = L.attention_init(KEY, 32, 4, 4, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 32))
+    pos = jnp.arange(12)
+    a, _ = L.attention_apply(params, x, n_heads=4, n_kv_heads=4, d_head=8,
+                             positions=pos, cfg=NONE, window=None)
+    b, _ = L.attention_apply(params, x, n_heads=4, n_kv_heads=4, d_head=8,
+                             positions=pos, cfg=NONE, window=100)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-6)
+    c, _ = L.attention_apply(params, x, n_heads=4, n_kv_heads=4, d_head=8,
+                             positions=pos, cfg=NONE, window=2)
+    assert not np.allclose(np.asarray(a), np.asarray(c), atol=1e-4)
+
+
+def test_rolling_window_cache_decode():
+    """Rolling cache (size w) decode == full-cache decode with window w,
+    once more than w tokens have been written."""
+    heads, hd, d = 2, 8, 16
+    params = L.attention_init(KEY, d, heads, heads, hd)
+    w = 4
+    toks = jax.random.normal(jax.random.PRNGKey(1), (1, 10, d))
+    full = {"k": jnp.zeros((1, 16, heads, hd)),
+            "v": jnp.zeros((1, 16, heads, hd)), "pos": jnp.zeros(1, jnp.int32)}
+    roll = {"k": jnp.zeros((1, w, heads, hd)),
+            "v": jnp.zeros((1, w, heads, hd)), "pos": jnp.zeros(1, jnp.int32)}
+    for t in range(10):
+        xt = toks[:, t:t + 1]
+        pos = jnp.full((1,), t, jnp.int32)
+        of, nf = L.attention_apply(params, xt, n_heads=heads,
+                                   n_kv_heads=heads, d_head=hd,
+                                   positions=pos[:, None], cfg=NONE,
+                                   window=w,
+                                   kv_cache={**full, "pos": pos},
+                                   rolling=False)
+        full = {"k": nf["k"], "v": nf["v"], "pos": pos}
+        orr, nr = L.attention_apply(params, xt, n_heads=heads,
+                                    n_kv_heads=heads, d_head=hd,
+                                    positions=pos[:, None], cfg=NONE,
+                                    window=w,
+                                    kv_cache={**roll, "pos": pos},
+                                    rolling=True)
+        roll = {"k": nr["k"], "v": nr["v"], "pos": pos}
+        np.testing.assert_allclose(np.asarray(of), np.asarray(orr),
+                                   rtol=1e-4, atol=1e-5,
+                                   err_msg=f"step {t}")
+
+
+def test_rope_relative():
+    """RoPE scores depend only on relative distance."""
+    x = jax.random.normal(KEY, (1, 2, 1, 16))
+    q1 = L.rope(x, jnp.array([0, 3]))
+    q2 = L.rope(x, jnp.array([5, 8]))
+    s1 = float(jnp.sum(q1[0, 0, 0] * q1[0, 1, 0]))
+    s2 = float(jnp.sum(q2[0, 0, 0] * q2[0, 1, 0]))
+    assert np.isclose(s1, s2, rtol=1e-4)
+
+
+def test_gqa_repeat():
+    k = jnp.arange(12.0).reshape(1, 1, 3, 4)
+    r = L._repeat_kv(k, 2)
+    assert r.shape == (1, 1, 6, 4)
+    np.testing.assert_array_equal(np.asarray(r[0, 0, 0]),
+                                  np.asarray(r[0, 0, 1]))
+
+
+# ---------------- chunked attention ----------------
+
+def test_sdpa_chunked_matches_reference():
+    """Online-softmax chunked attention == exact sdpa (fwd + grad),
+    causal / windowed / ragged shapes."""
+    for (sq, w) in [(64, None), (100, None), (64, 16), (37, 8)]:
+        q = jax.random.normal(KEY, (2, sq, 4, 16))
+        k = jax.random.normal(jax.random.PRNGKey(1), (2, sq, 4, 16))
+        v = jax.random.normal(jax.random.PRNGKey(2), (2, sq, 4, 16))
+        pos = jnp.arange(sq)
+        ref = L.sdpa(q, k, v, q_pos=pos, kv_pos=pos, causal=True, window=w)
+        got = L.sdpa_chunked(q, k, v, q_pos=pos, kv_pos=pos, causal=True,
+                             window=w, q_chunk=16, kv_chunk=32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=3e-5, rtol=3e-5,
+                                   err_msg=f"sq={sq} w={w}")
+
+    def loss(fn, qq, **kw):
+        return jnp.sum(fn(qq, k, v, **kw) ** 2)
+
+    sq = 32
+    q = jax.random.normal(KEY, (1, sq, 2, 8))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, sq, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(4), (1, sq, 2, 8))
+    pos = jnp.arange(sq)
+    g1 = jax.grad(lambda qq: loss(L.sdpa, qq, q_pos=pos, kv_pos=pos))(q)
+    g2 = jax.grad(lambda qq: loss(L.sdpa_chunked, qq, q_pos=pos,
+                                  kv_pos=pos, q_chunk=8, kv_chunk=8))(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_model_with_q_chunk_matches_reference():
+    """Whole-model forward with attn_q_chunk == reference attention."""
+    from repro.configs.registry import get_config
+    from repro.launch import shapes as SHP
+    from repro.models import registry as MR
+    cfg = get_config("internlm2-1.8b").reduced()
+    params = MR.init(KEY, cfg)
+    batch = {"tokens": jax.random.randint(KEY, (2, 64), 0, cfg.vocab_size)}
+    ref, _ = MR.apply(params, batch, cfg, SHP.jigsaw_for(cfg))
+    cfg2 = cfg.replace(attn_q_chunk=16)
+    got, _ = MR.apply(params, batch, cfg2, SHP.jigsaw_for(cfg2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,117 @@
+"""Losses, optimizer, schedule, checkpoint unit tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import io as ckpt_io
+from repro.optim import adam, schedule as sched
+from repro.train import loss as losses
+
+
+# ---------------- losses ----------------
+
+def test_latitude_weights_mean_one():
+    w = losses.latitude_weights(33)
+    assert np.isclose(float(jnp.mean(w)), 1.0, atol=1e-6)
+    assert float(w[16]) > float(w[0])  # equator > pole
+
+
+def test_pressure_level_weights():
+    w = losses.pressure_level_weights(69)
+    assert w.shape == (69,)
+    assert np.isclose(float(w[4]), 1.0)        # top level of var 0
+    assert np.isclose(float(w[4 + 12]), 0.3)   # lowest level of var 0
+
+
+def test_lm_cross_entropy_matches_manual():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 32))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 30)
+    got = losses.lm_cross_entropy(logits, labels, vocab_size=30)
+    lm = jax.nn.log_softmax(
+        jnp.where(jnp.arange(32) >= 30, -1e30, logits.astype(jnp.float32)))
+    want = -jnp.mean(jnp.take_along_axis(lm, labels[..., None], -1))
+    assert np.isclose(float(got), float(want), rtol=1e-5)
+
+
+def test_lm_cross_entropy_ignores_padded_vocab():
+    """Huge logits on padded ids must not affect the loss."""
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 32))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 30)
+    a = losses.lm_cross_entropy(logits, labels, vocab_size=30)
+    poisoned = logits.at[..., 30:].set(1e4)
+    b = losses.lm_cross_entropy(poisoned, labels, vocab_size=30)
+    assert np.isclose(float(a), float(b), rtol=1e-5)
+
+
+def test_weighted_mse_masks():
+    pred = jnp.ones((1, 4, 4, 2))
+    tgt = jnp.zeros((1, 4, 4, 2))
+    lat_w = jnp.array([0.0, 2.0, 2.0, 0.0])
+    assert np.isclose(float(losses.weighted_mse(pred, tgt, lat_w)), 1.0)
+
+
+# ---------------- optimizer ----------------
+
+def test_adam_matches_reference_step():
+    params = {"w": jnp.array([1.0, -2.0])}
+    grads = {"w": jnp.array([0.5, 0.5])}
+    cfg = adam.AdamConfig(b1=0.9, b2=0.999, eps=1e-8, grad_clip=None)
+    state = adam.init(params, cfg)
+    new, st2 = adam.update(params, grads, state, jnp.float32(0.1), cfg)
+    # bias-corrected first step: delta = lr * g/|g| = lr (sign)
+    np.testing.assert_allclose(np.asarray(new["w"]),
+                               np.asarray(params["w"]) - 0.1, rtol=1e-4)
+    assert int(st2["step"]) == 1
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = adam.clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(norm), 20.0)
+    assert np.isclose(float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(step=st.integers(0, 200_000))
+def test_schedule_bounds(step):
+    lr = float(sched.warmup_cosine(step, base_lr=1e-4, warmup_steps=1000,
+                                   total_steps=100_000, min_lr=1e-5))
+    assert 1e-6 - 1e-9 <= lr <= 1e-4 + 1e-9
+
+
+def test_schedule_shape():
+    assert np.isclose(float(sched.warmup_cosine(0, init_lr=1e-6)), 1e-6,
+                      rtol=1e-5)
+    assert np.isclose(float(sched.warmup_cosine(1000, base_lr=1e-4,
+                                                warmup_steps=1000)), 1e-4)
+    end = float(sched.warmup_cosine(100_000, base_lr=1e-4,
+                                    total_steps=100_000, min_lr=1e-5))
+    assert np.isclose(end, 1e-5, rtol=1e-3)
+
+
+# ---------------- checkpoint ----------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = {"layer": {"w": jnp.arange(6.0).reshape(2, 3),
+                        "b": jnp.zeros((3,))},
+              "embed": {"table": jnp.ones((4, 2))}}
+    opt = adam.init(params, adam.AdamConfig())
+    path = os.path.join(tmp_path, "ck")
+    ckpt_io.save(path, params, opt, step=42, extra={"arch": "t"})
+    p2, o2, step = ckpt_io.restore(path, like_params=params, like_opt=opt)
+    assert step == 42
+    np.testing.assert_array_equal(p2["layer"]["w"],
+                                  np.asarray(params["layer"]["w"]))
+    assert int(o2["step"]) == 0
+
+
+def test_checkpoint_shape_validation(tmp_path):
+    params = {"w": jnp.zeros((2, 2))}
+    path = os.path.join(tmp_path, "ck")
+    ckpt_io.save(path, params, step=1)
+    import pytest
+    with pytest.raises(ValueError):
+        ckpt_io.restore(path, like_params={"w": jnp.zeros((3, 3))})

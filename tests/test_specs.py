@@ -1,0 +1,63 @@
+"""Sharding-spec derivation unit tests (launch/specs.py)."""
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sharding import RULES_1D, RULES_2D
+from repro.launch import specs as S
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def test_sanitize_spec_drops_non_dividing():
+    m = jax.make_mesh((1,), ("model",))  # real mesh for shape lookup
+    # use a dict-mesh stand-in via the FakeMesh duck type
+    out = S.sanitize_spec((8, 128), P("model", None), MESH)
+    assert out == P(None, None)          # 8 % 16 != 0 -> replicate
+    out = S.sanitize_spec((32, 128), P("model", "data"), MESH)
+    assert out == P("model", "data")
+    out = S.sanitize_spec((1,), P(("data", "model")), MESH)
+    assert out == P(None)
+
+
+def test_zero1_adds_data_axis():
+    pspecs = {"w": P(None, "model"), "b": P("model"),
+              "scale": P(None)}
+    ospecs = S.opt_specs(None, pspecs, zero1_axis="data")
+    assert ospecs["mu"]["w"] == P("data", "model")
+    assert ospecs["nu"]["scale"] == P("data")
+    # never doubles an axis already in use
+    pspecs2 = {"w": P("data", "model")}
+    o2 = S.opt_specs(None, pspecs2, zero1_axis="data")
+    assert o2["mu"]["w"] == P("data", "model")
+
+
+def test_lm_head_and_table_shard_vocab_dim():
+    import jax.numpy as jnp
+    params = {"lm_head": {"w": jnp.zeros((1024, 64))},
+              "embed": {"table": jnp.zeros((1024, 64))},
+              "layer": {"ffn": {"w": jnp.zeros((256, 64))}}}
+    from repro.configs.registry import get_config
+    cfg = get_config("internlm2-1.8b").reduced()
+    specs = S.param_specs(params, cfg, RULES_1D, MESH)
+    assert specs["lm_head"]["w"] == P("model", None)   # vocab dim
+    assert specs["embed"]["table"] == P("model", None)
+    assert specs["layer"]["ffn"]["w"] == P(None, "model")  # contracting
+
+
+def test_kv_cache_spec_modes():
+    import jax.numpy as jnp
+    from repro.configs.registry import get_config
+    cache = {"k": jnp.zeros((4, 8, 64, 8, 16)), "pos": jnp.zeros((8,))}
+    cfg = get_config("dbrx-132b")          # kv=8, uneven over 16
+    specs = S.cache_specs(cache, cfg, RULES_1D, MESH)
+    assert specs["k"] == P(None, ("data",), "model", None, None)  # seq mode
+    cfg16 = get_config("gemma3-27b")       # kv=16, even
+    specs = S.cache_specs(cache, cfg16, RULES_1D, MESH)
+    assert specs["k"] == P(None, ("data",), None, "model", None)  # heads

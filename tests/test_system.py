@@ -1,0 +1,69 @@
+"""End-to-end behaviour tests for the full system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch import shapes as SH
+from repro.launch.train import train
+
+
+def test_all_archs_registered():
+    assert len(ARCH_IDS) == 11  # 10 assigned + the paper's WeatherMixer
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        assert cfg.arch_id == a
+        assert cfg.source, f"{a}: missing citation"
+
+
+def test_shape_applicability_matrix():
+    """The documented skip matrix (DESIGN.md): exactly the sub-quadratic
+    archs run long_500k; mixer skips decode shapes."""
+    long_ok = set()
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        ok, _ = SH.applicable(cfg, SH.SHAPES["long_500k"])
+        if ok:
+            long_ok.add(a)
+    assert long_ok == {"jamba-1.5-large-398b", "gemma3-27b", "mamba2-130m",
+                       "h2o-danube-1.8b"}
+    mixer = get_config("weathermixer-1b")
+    for s in ("decode_32k", "long_500k"):
+        ok, reason = SH.applicable(mixer, SH.SHAPES[s])
+        assert not ok and "decode" in reason
+
+
+def test_lm_training_loss_decreases():
+    hist, _ = train("internlm2-1.8b", steps=40, batch=8, seq_len=64,
+                    reduced=True, log_every=39, lr=2e-3)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.5, hist
+
+
+def test_moe_training_stable():
+    hist, _ = train("phi3.5-moe-42b-a6.6b", steps=20, batch=4, seq_len=32,
+                    reduced=True, log_every=19, lr=1e-3)
+    assert np.isfinite(hist[-1]["loss"])
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_rollout_finetune_runs():
+    """The paper's randomized-rollout fine-tuning (§6) end to end."""
+    hist, _ = train("weathermixer-1b", steps=10, batch=2, reduced=True,
+                    rollout=3, log_every=9, lr=5e-4)
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_checkpoint_train_resume(tmp_path):
+    import os
+    from repro.checkpoint import io as ckpt_io
+    from repro.models import registry as M
+    path = os.path.join(tmp_path, "ck")
+    _, params = train("stablelm-3b", steps=5, batch=2, seq_len=32,
+                      reduced=True, ckpt=path, log_every=100)
+    cfg = get_config("stablelm-3b").reduced()
+    like = M.init(jax.random.PRNGKey(0), cfg)
+    p2, o2, step = ckpt_io.restore(path, like_params=like)
+    assert step == 5
+    got = jax.tree.leaves(p2)
+    want = jax.tree.leaves(params)
+    assert all(np.allclose(a, np.asarray(b)) for a, b in zip(got, want))
