@@ -6,8 +6,42 @@ DP gradient allreduce (ring over the data axis; volume = local param
 shard bytes -- the paper's point: MP shards the model, so each DP ring
 only reduces 1/n of the parameters, which is why 2-/4-way scale better
 than 1-way at 256 devices: 68%/72% vs 51%).
+
+Plus a MEASURED weak-scaling row set: a real reduced-WM step through
+``TrainEngine`` (sharded input pipeline included) at dp = 1/2/4 on
+host-emulated devices with constant per-device batch.  Absolute times
+are CPU artifacts; the ratios expose the DP gradient-reduction cost.
 """
-from benchmarks.common import emit
+from benchmarks.common import emit, run_subprocess_devices
+
+# thin TrainEngine caller, mirroring fig89's strong-scaling probe
+MEASURE_CODE = """
+from repro.configs.registry import get_config
+from repro.launch.engine import EngineConfig, TrainEngine
+
+dp = {dp}
+cfg = get_config("weathermixer-1b").reduced().replace(
+    scheme="1d" if dp > 1 else "none",
+    wm_lat=32, wm_lon=64, d_model=128, wm_d_tok=256, wm_d_ch=128)
+eng = TrainEngine("weathermixer-1b", reduced=False, config_override=cfg,
+                  mesh_model=1, mesh_data=dp, scheme=cfg.scheme,
+                  config=EngineConfig(steps=12, batch=4 * dp))
+print("SECONDS", eng.benchmark(steps=10, warmup=2))
+"""
+
+
+def measured_dp_scaling():
+    rows = []
+    t1 = None
+    for dp in (1, 2, 4):
+        out = run_subprocess_devices(MEASURE_CODE.format(dp=dp),
+                                     n_devices=max(dp, 1))
+        secs = float([l for l in out.splitlines()
+                      if l.startswith("SECONDS")][0].split()[1])
+        t1 = t1 or secs
+        rows.append((f"fig10/measured/{dp}dp", int(secs * 1e6),
+                     f"weak_eff={t1 / secs:.2f}"))
+    return rows
 
 
 def table2_configs():
@@ -45,6 +79,7 @@ def run():
                          f"weak_eff={eff:.2f}|agg_pflops={pflops:.1f}"))
     rows.append(("fig10/claim", 0,
                  "MP_shards_gradients=>higher_DP_efficiency_at_256"))
+    rows += measured_dp_scaling()
     return rows
 
 

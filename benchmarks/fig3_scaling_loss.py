@@ -28,16 +28,9 @@ def run(steps: int = 60):
         cfg = base.replace(**kw)
         with Timer() as t:
             # reuse the trainer but with an overridden config
-            import repro.launch.train as T
-
-            orig = T.get_config
-            T.get_config = lambda a: cfg  # noqa: E731
-            try:
-                hist, params = T.train("weathermixer-1b", steps=steps,
-                                       batch=4, reduced=False, lr=2e-3,
-                                       log_every=steps)
-            finally:
-                T.get_config = orig
+            hist, params = train("weathermixer-1b", steps=steps,
+                                 batch=4, reduced=False, lr=2e-3,
+                                 log_every=steps, config_override=cfg)
         # validation on held-out steps
         ds = WeatherDataset(WeatherDataConfig(
             lat=cfg.wm_lat, lon=cfg.wm_lon, channels=cfg.wm_channels,

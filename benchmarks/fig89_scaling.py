@@ -14,47 +14,20 @@ on a 1.2B model; weak scaling 82%.
 """
 from benchmarks.common import emit, run_subprocess_devices
 
+# thin TrainEngine caller: the engine owns mesh, pipeline, and step
+# dispatch; the benchmark only picks the model-parallel degree.
 MEASURE_CODE = """
-import time, jax
-import jax.numpy as jnp
 from repro.configs.registry import get_config
-from repro.launch import shapes as SH
-from repro.launch.mesh import make_host_mesh
-from repro.launch import specs as S
-from repro.models import registry as M
-from repro.optim import adam
-from repro.train.step import make_train_step
+from repro.launch.engine import EngineConfig, TrainEngine
 
 way = {way}
 cfg = get_config("weathermixer-1b").reduced().replace(
     scheme="1d" if way > 1 else "none",
     wm_lat=64, wm_lon=128, d_model=256, wm_d_tok=512, wm_d_ch=256)
-jcfg = SH.jigsaw_for(cfg)
-params = M.init(jax.random.PRNGKey(0), cfg)
-acfg = adam.AdamConfig()
-opt = adam.init(params, acfg)
-step = make_train_step(cfg, jcfg, acfg)
-import numpy as np
-b = {{"fields": jnp.asarray(np.random.randn(4, 64, 128, 8), np.float32)}}
-b["target"] = b["fields"] * 0.9
-
-def run():
-    global params, opt
-    jitted = jax.jit(step, donate_argnums=(0, 1))
-    params, opt, _ = jitted(params, opt, b)   # compile+warm
-    jax.block_until_ready(params)
-    t0 = time.time()
-    for _ in range(10):
-        params, opt, _ = jitted(params, opt, b)
-    jax.block_until_ready(jax.tree.leaves(params)[0])
-    print("SECONDS", (time.time() - t0) / 10)
-
-if way > 1:
-    mesh = make_host_mesh(model=way, data=1)
-    with jax.set_mesh(mesh):
-        run()
-else:
-    run()
+eng = TrainEngine("weathermixer-1b", reduced=False, config_override=cfg,
+                  mesh_model=way, mesh_data=1, scheme=cfg.scheme,
+                  config=EngineConfig(steps=12, batch=4))
+print("SECONDS", eng.benchmark(steps=10, warmup=2))
 """
 
 

@@ -21,7 +21,8 @@ def main() -> None:
     from benchmarks import (comm_volume, fig3_scaling_loss,
                             fig4_equivalent_usage, fig7_roofline,
                             fig10_dp_scaling, fig56_rollout, fig89_scaling,
-                            table1_model_zoo, table3_energy)
+                            pipeline_overlap, table1_model_zoo,
+                            table3_energy)
 
     modules = [
         ("table1", table1_model_zoo),
@@ -31,10 +32,11 @@ def main() -> None:
         ("fig7", fig7_roofline),
         ("fig89", fig89_scaling),
         ("fig10", fig10_dp_scaling),
+        ("pipeline", pipeline_overlap),
         ("table3", table3_energy),
         ("comm", comm_volume),
     ]
-    slow = {"fig3", "fig4", "fig56", "fig89"}
+    slow = {"fig3", "fig4", "fig56", "fig89", "fig10", "pipeline"}
     if args.fast:
         modules = [(k, m) for k, m in modules if k not in slow]
     if args.only:

@@ -69,6 +69,28 @@ def main():
               f"   collective bytes/dev: {st.total_bytes:.0f}  "
               f"{ {k: v for k, v in st.counts.items() if v} }")
 
+    print("\n== Domain-parallel input pipeline (paper §5) ==")
+    # thin TrainEngine caller: each model-parallel rank generates only its
+    # (lon x channel) slice; a background thread prefetches ahead of
+    # compute.  Same seed => identical losses to the legacy sync path.
+    from repro.launch.engine import EngineConfig, TrainEngine
+    hist = {}
+    for mode, pf in [("sync-full", 0), ("sharded", 2)]:
+        eng = TrainEngine("weathermixer-1b", mesh_model=4, mesh_data=2,
+                          scheme="1d",
+                          config=EngineConfig(steps=4, batch=4,
+                                              log_every=3, pipeline=mode,
+                                              prefetch=pf))
+        hist[mode] = eng.run()
+        per_rank = max(eng.pipeline.stats.rank_bytes.get(
+            "fields", {0: 0}).values())
+        print(f"  mode={mode:10s} final loss "
+              f"{hist[mode][-1]['loss']:.6f}  host bytes/rank/run "
+              f"{per_rank}")
+    same = np.allclose(hist["sync-full"][-1]["loss"],
+                       hist["sharded"][-1]["loss"], rtol=1e-6)
+    print(f"  sharded+prefetch == sync-full losses: {same}")
+
 
 if __name__ == "__main__":
     main()

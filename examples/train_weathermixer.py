@@ -20,6 +20,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--full-100m", action="store_true")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--pipeline", default="sharded",
+                    choices=["sharded", "sync-full"])
+    ap.add_argument("--prefetch", type=int, default=2)
+    ap.add_argument("--accum", type=int, default=1)
     args = ap.parse_args()
 
     import repro.launch.train as T
@@ -33,18 +37,16 @@ def main():
             param_dtype="float32", compute_dtype="float32", remat=False,
             scheme="2d")
         print(f"~{cfg.param_count() / 1e6:.0f}M parameter WeatherMixer")
-        orig = T.get_config
-        T.get_config = lambda a: cfg
-        try:
-            T.train("weathermixer-1b", steps=args.steps, batch=args.batch,
-                    reduced=False, mesh_model=4, mesh_data=2, scheme="2d",
-                    lr=3e-4, ckpt=args.ckpt)
-        finally:
-            T.get_config = orig
+        T.train("weathermixer-1b", steps=args.steps, batch=args.batch,
+                reduced=False, mesh_model=4, mesh_data=2, scheme="2d",
+                lr=3e-4, ckpt=args.ckpt, config_override=cfg,
+                pipeline=args.pipeline, prefetch=args.prefetch,
+                accum=args.accum)
     else:
         T.train("weathermixer-1b", steps=args.steps, batch=args.batch,
                 reduced=True, mesh_model=4, mesh_data=2, scheme="2d",
-                lr=1e-3, ckpt=args.ckpt)
+                lr=1e-3, ckpt=args.ckpt, pipeline=args.pipeline,
+                prefetch=args.prefetch, accum=args.accum)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,193 @@
+"""JAX version-compatibility shims (single import point for jax API drift).
+
+The codebase is written against the modern jax public API:
+
+  * ``jax.shard_map`` (with ``axis_names=`` / ``check_vma=``)
+  * ``jax.set_mesh`` context manager + ``jax.sharding.get_abstract_mesh``
+  * ``jax.make_mesh(..., axis_types=...)`` and ``jax.sharding.AxisType``
+  * ``jax.P`` (alias of ``jax.sharding.PartitionSpec``)
+  * ``jax.tree.map``
+
+The pinned environment ships jax 0.4.37, which has the same functionality
+under older spellings (``jax.experimental.shard_map`` with ``check_rep=`` /
+``auto=``, the legacy ``with mesh:`` resource env, no axis types).  This
+module exposes canonical names for all of them and, on import, installs any
+*missing* attribute onto the ``jax`` / ``jax.sharding`` namespaces so call
+sites written for newer jax run unmodified.  On a modern jax nothing is
+patched -- every shim defers to the native symbol when present.
+
+Import ``repro`` (the package __init__ imports this module) or import the
+names directly:
+
+    from repro.compat import set_mesh, shard_map, make_mesh, P
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+from typing import Optional
+
+import jax
+import jax.sharding
+from jax.sharding import Mesh, PartitionSpec
+
+P = PartitionSpec
+
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+_HAS_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+
+
+# ---------------------------------------------------------------------------
+# AxisType
+# ---------------------------------------------------------------------------
+
+if _HAS_AXIS_TYPE:
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):
+        """Stand-in for ``jax.sharding.AxisType`` (jax >= 0.6).  Old jax
+        treats every mesh axis as Auto, so the value is advisory only."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+# ---------------------------------------------------------------------------
+# make_mesh
+# ---------------------------------------------------------------------------
+
+_native_make_mesh = jax.make_mesh
+_accepts_axis_types = (
+    "axis_types" in inspect.signature(_native_make_mesh).parameters)
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+    """``jax.make_mesh`` accepting ``axis_types`` on every jax version."""
+    if _accepts_axis_types:
+        return _native_make_mesh(axis_shapes, axis_names, devices=devices,
+                                 axis_types=axis_types)
+    return _native_make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+# ---------------------------------------------------------------------------
+# set_mesh / get_abstract_mesh
+# ---------------------------------------------------------------------------
+
+_MESH_STACK: list = []
+
+
+class _EmptyMesh:
+    """Mimics the empty abstract mesh: ``axis in mesh.shape`` is False."""
+    shape: dict = {}
+    axis_names: tuple = ()
+    empty = True
+
+
+_EMPTY_MESH = _EmptyMesh()
+
+if _HAS_SET_MESH:
+    set_mesh = jax.set_mesh
+else:
+    @contextlib.contextmanager
+    def set_mesh(mesh: Mesh):
+        """Context manager equivalent of ``jax.set_mesh`` for old jax.
+
+        Tracks the mesh so ``get_abstract_mesh`` can see it from inside a
+        trace, and enters the legacy ``with mesh:`` resource env so bare
+        ``PartitionSpec``s work in ``with_sharding_constraint``."""
+        _MESH_STACK.append(mesh)
+        try:
+            with mesh:
+                yield mesh
+        finally:
+            _MESH_STACK.pop()
+
+if _HAS_ABSTRACT_MESH:
+    get_abstract_mesh = jax.sharding.get_abstract_mesh
+else:
+    def get_abstract_mesh():
+        """Innermost mesh set via :func:`set_mesh` (a *concrete* Mesh --
+        shard_map accepts it wherever the abstract mesh is used)."""
+        if _MESH_STACK:
+            return _MESH_STACK[-1]
+        try:
+            from jax._src import mesh as mesh_lib
+            m = mesh_lib.thread_resources.env.physical_mesh
+            if m is not None and len(m.shape):
+                return m
+        except Exception:
+            pass
+        return _EMPTY_MESH
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The mesh set via set_mesh, or None (works on every jax version)."""
+    m = get_abstract_mesh()
+    if m is None or getattr(m, "empty", False) or not len(m.shape):
+        return None
+    return m
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+if _HAS_SHARD_MAP:
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+
+    def shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+                  check_vma=None, check_rep=None):
+        """Modern ``jax.shard_map`` signature on old jax.
+
+        ``check_vma`` maps to ``check_rep``.  Modern jax treats mesh axes
+        outside ``axis_names`` as Auto (compiler-managed); old XLA cannot
+        mix manual+auto regions here ("PartitionId is not supported for
+        SPMD partitioning"), so every axis is made manual instead: axes
+        unmentioned in the specs are then simply replicated, which is
+        exactly how this codebase uses partial ``axis_names`` (see
+        jigsaw_linear: batch axes are always listed explicitly)."""
+        if mesh is None:
+            mesh = get_abstract_mesh()
+        if axis_names is not None:
+            unknown = frozenset(axis_names) - frozenset(mesh.axis_names)
+            if unknown:
+                raise ValueError(f"axis_names {unknown} not in mesh "
+                                 f"{tuple(mesh.axis_names)}")
+        check = True
+        if check_vma is not None:
+            check = check_vma
+        elif check_rep is not None:
+            check = check_rep
+        return _old_shard_map(f, mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check)
+
+
+# ---------------------------------------------------------------------------
+# install missing attributes onto the jax namespaces
+# ---------------------------------------------------------------------------
+
+def install() -> None:
+    """Patch old-jax namespaces with the modern spellings (idempotent; a
+    no-op on jax versions that already provide them natively)."""
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = set_mesh
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if not hasattr(jax, "P"):
+        jax.P = PartitionSpec
+    if not _accepts_axis_types:
+        jax.make_mesh = make_mesh
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = AxisType
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+    if not hasattr(jax.sharding, "use_mesh"):
+        jax.sharding.use_mesh = set_mesh
+
+
+install()

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import get_abstract_mesh, shard_map
 from repro.core.sharding import ShardingRules, constrain
 
 Impl1D = ("ring", "rs", "gspmd", "allreduce")
@@ -188,7 +189,7 @@ def jigsaw_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     """
     tp = rules.tp_axis
     if mesh is None:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = get_abstract_mesh()
     p = mesh.shape[tp] if tp in mesh.shape else 1
 
     # Uneven shapes cannot ride the explicit shard_map collectives (even
@@ -239,7 +240,7 @@ def jigsaw_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     # check_vma=False: with B=1 (long_500k) the batch stays replicated
     # and VMA inference cannot see through the FSDP all_gather; the
     # equivalence tests (tests/dist_scenarios.py) cover correctness.
-    y = jax.shard_map(fn, mesh=mesh, in_specs=(xspec, wspec),
+    y = shard_map(fn, mesh=mesh, in_specs=(xspec, wspec),
                       out_specs=ospec, axis_names=manual,
                       check_vma=False)(x, w)
     if b is not None:
@@ -325,7 +326,7 @@ def jigsaw_linear_2d(x: jax.Array, w: jax.Array,
         raise ValueError("jigsaw_linear_2d requires 2-D ShardingRules")
     dom, tp = rules.dom_axis, rules.tp_axis
     if mesh is None:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = get_abstract_mesh()
     p, q = mesh.shape[dom], mesh.shape[tp]
 
     batch_axes = _present_batch_axes(mesh, rules)
@@ -348,7 +349,7 @@ def jigsaw_linear_2d(x: jax.Array, w: jax.Array,
 
     fn = partial(jigsaw_matmul_2d, dom_axis=dom, tp_axis=tp, dom_size=p,
                  tp_size=q, accum_dtype=accum_dtype)
-    y = jax.shard_map(fn, mesh=mesh, in_specs=(xspec, wspec),
+    y = shard_map(fn, mesh=mesh, in_specs=(xspec, wspec),
                       out_specs=ospec, axis_names=manual,
                       check_vma=False)(x, w)
     y = y.astype(x.dtype)
@@ -419,7 +420,7 @@ def jigsaw_linear_2d_t(x: jax.Array, w: jax.Array,
         raise ValueError("jigsaw_linear_2d_t requires 2-D ShardingRules")
     dom, tp = rules.dom_axis, rules.tp_axis
     if mesh is None:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = get_abstract_mesh()
     p, q = mesh.shape[dom], mesh.shape[tp]
 
     batch_axes = _present_batch_axes(mesh, rules)
@@ -441,7 +442,7 @@ def jigsaw_linear_2d_t(x: jax.Array, w: jax.Array,
 
     fn = partial(jigsaw_matmul_2d_t, dom_axis=dom, tp_axis=tp, dom_size=p,
                  tp_size=q, accum_dtype=accum_dtype)
-    y = jax.shard_map(fn, mesh=mesh, in_specs=(xspec, wspec),
+    y = shard_map(fn, mesh=mesh, in_specs=(xspec, wspec),
                       out_specs=ospec, axis_names=manual,
                       check_vma=False)(x, w)
     y = y.astype(x.dtype)

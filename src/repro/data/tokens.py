@@ -3,6 +3,13 @@
 Deterministic, learnable structure: an affine congruential walk with
 random restarts -- next-token prediction has low achievable entropy, so
 smoke-training shows real loss decrease without any external data.
+
+Every *row* is a pure function of its global sample index
+``step * batch_size + i`` (its own ``SeedSequence`` stream), so a
+data-parallel rank can generate exactly the rows it owns
+(``sample_shard``) and the result is bit-identical to slicing the full
+batch -- the token-stream analogue of the weather pipeline's
+domain-parallel read (paper §5).
 """
 from __future__ import annotations
 
@@ -23,17 +30,40 @@ class TokenDataset:
     def __init__(self, cfg: TokenDataConfig):
         self.cfg = cfg
 
-    def sample_batch(self, step: int, batch_size: int) -> dict:
+    def _rows(self, idx: np.ndarray) -> dict:
+        """Generate the rows with global sample indices ``idx``."""
         c = self.cfg
-        rng = np.random.default_rng(np.random.SeedSequence([c.seed, step]))
         v = c.vocab_size
         a, b = 31, 17
-        x = np.zeros((batch_size, c.seq_len + 1), np.int64)
-        x[:, 0] = rng.integers(0, v, batch_size)
-        restarts = rng.random((batch_size, c.seq_len)) < c.restart_p
-        fresh = rng.integers(0, v, (batch_size, c.seq_len))
+        rngs = [np.random.default_rng(
+            np.random.SeedSequence([c.seed, 7, int(s)])) for s in idx]
+        x = np.zeros((len(idx), c.seq_len + 1), np.int64)
+        x[:, 0] = [r.integers(0, v) for r in rngs]
+        restarts = np.stack([r.random(c.seq_len) < c.restart_p
+                             for r in rngs]) if len(idx) else \
+            np.zeros((0, c.seq_len), bool)
+        fresh = np.stack([r.integers(0, v, c.seq_len) for r in rngs]) \
+            if len(idx) else np.zeros((0, c.seq_len), np.int64)
         for t in range(c.seq_len):
             nxt = (x[:, t] * a + b) % v
             x[:, t + 1] = np.where(restarts[:, t], fresh[:, t], nxt)
         return {"tokens": x[:, :-1].astype(np.int32),
                 "labels": x[:, 1:].astype(np.int32)}
+
+    def sample_batch(self, step: int, batch_size: int) -> dict:
+        idx = np.arange(batch_size, dtype=np.int64) + step * batch_size
+        return self._rows(idx)
+
+    def sample_shard(self, step: int, batch_size: int,
+                     row_slice: slice = slice(None)) -> dict:
+        """Per-data-rank sharded read: only ``row_slice`` of the global
+        batch; bit-identical to slicing ``sample_batch`` (each row has
+        its own deterministic stream)."""
+        idx = (np.arange(batch_size, dtype=np.int64)
+               + step * batch_size)[row_slice]
+        return self._rows(idx)
+
+    def io_bytes_per_rank(self, batch_size: int, n_ranks: int) -> int:
+        """Modeled I/O per data-parallel rank per step (tokens + labels,
+        int32): row sharding divides the read by the rank count."""
+        return 2 * 4 * batch_size * self.cfg.seq_len // n_ranks

@@ -98,17 +98,24 @@ class WeatherDataset:
 
     def sample_shard(self, step: int, batch_size: int,
                      lon_slice: slice = slice(None),
-                     chan_slice: slice = slice(None)) -> dict:
+                     chan_slice: slice = slice(None),
+                     row_slice: slice = slice(None),
+                     lat_slice: slice = slice(None),
+                     horizon: int = 1) -> dict:
         """Domain-parallel read: only the (lon, channel) partition this
-        model-parallel rank owns (paper §5 "Data loading").  Identical to
-        slicing sample_batch (property-tested), but touches only
-        len(lon_slice)*len(chan_slice) of the grid."""
-        idx = np.arange(batch_size, dtype=np.int64) + step * batch_size
-        lat = np.arange(self.cfg.lat)
+        model-parallel rank owns (paper §5 "Data loading"), and only the
+        ``row_slice`` rows of the global batch this data-parallel rank
+        owns.  Identical to slicing ``sample_batch(..., horizon=horizon)``
+        (property-tested), but touches only the sliced portion of the
+        grid.  ``horizon`` must match ``sample_batch``'s for rollout
+        fine-tuning targets to agree."""
+        idx = (np.arange(batch_size, dtype=np.int64)
+               + step * batch_size)[row_slice]
+        lat = np.arange(self.cfg.lat)[lat_slice]
         lon = np.arange(self.cfg.lon)[lon_slice]
         ch = np.arange(self.cfg.channels)[chan_slice]
         x = self._eval(idx, lat, lon, ch, 0.0)
-        y = self._eval(idx, lat, lon, ch, self.cfg.dt_phase)
+        y = self._eval(idx, lat, lon, ch, horizon * self.cfg.dt_phase)
         if self.cfg.noise:
             # noise is per-full-grid; regenerate and slice for consistency
             r = np.random.default_rng(
@@ -116,7 +123,8 @@ class WeatherDataset:
             full = self.cfg
             n = r.normal(size=(batch_size, full.lat, full.lon,
                                full.channels)).astype(np.float32)
-            y = y + self.cfg.noise * n[:, :, lon_slice, chan_slice]
+            y = y + self.cfg.noise * n[row_slice][:, lat_slice][
+                :, :, lon_slice, chan_slice]
         return {"fields": x, "target": y}
 
     def io_bytes_per_rank(self, batch_size: int, n_ranks: int) -> int:

@@ -1,0 +1,230 @@
+"""TrainEngine: the training loop as a small reusable subsystem.
+
+Replaces the monolithic ``train()`` loop: the engine owns
+
+  * mesh / sharding-rule resolution and the jitted step functions
+    (one per rollout length, the paper's §6 randomized-rollout schedule),
+  * the input pipeline (domain-parallel sharded reads + background
+    prefetch, ``repro.data.pipeline``; ``sync-full`` preserves the legacy
+    host-side full-batch generation for A/B runs),
+  * microbatch gradient accumulation (``accum``),
+  * eval cadence (held-out steps on a separate pipeline instance, so the
+    prefetch thread and eval reads never share dataset memo state),
+  * metrics history, logging, and checkpoint hooks.
+
+``launch/train.py``, the examples, and the measured benchmarks are thin
+callers of this class (DESIGN.md §7).
+
+Typical use:
+
+    eng = TrainEngine("weathermixer-1b", mesh_model=4, mesh_data=2,
+                      config=EngineConfig(steps=100, batch=8, rollout=3))
+    history = eng.run()
+    params = eng.params
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from contextlib import nullcontext
+from functools import partial
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.checkpoint import io as ckpt_io
+from repro.configs.registry import get_config
+from repro.core.sharding import RULES_1D
+from repro.data.pipeline import InputPipeline, make_pipeline
+from repro.launch import shapes as SH
+from repro.models import registry as M
+from repro.optim import adam, schedule as sched
+from repro.train.step import make_eval_step, make_train_step
+
+# held-out validation stream: step indices far past any training step
+EVAL_STEP_OFFSET = 1 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Step-dispatch policy of a TrainEngine (everything that is not the
+    model / mesh itself)."""
+    steps: int = 100
+    batch: int = 8
+    seq_len: int = 128
+    rollout: int = 1           # randomized-rollout fine-tuning upper bound
+    lr: float = 1e-3
+    log_every: int = 10
+    eval_every: int = 0        # 0 = no mid-training eval
+    eval_batches: int = 2
+    accum: int = 1             # microbatch gradient accumulation
+    ckpt: Optional[str] = None
+    ckpt_every: int = 0        # 0 = only a final checkpoint (if ckpt set)
+    seed: int = 0
+    pipeline: str = "sharded"  # "sharded" | "sync-full"
+    prefetch: int = 2          # 0 disables the background thread
+    metrics_out: Optional[str] = None
+
+
+class TrainEngine:
+    """Owns params/opt state, the jitted steps, and the input pipeline."""
+
+    def __init__(self, arch: str, *, reduced: bool = True,
+                 mesh_model: int = 1, mesh_data: int = 1,
+                 scheme: Optional[str] = None, impl: Optional[str] = None,
+                 config: EngineConfig = EngineConfig(),
+                 init_params=None, config_override=None):
+        self.arch = arch
+        self.config = config
+        self.reduced = reduced
+        cfg = config_override if config_override is not None \
+            else get_config(arch)
+        if reduced:
+            cfg = cfg.reduced()
+        if scheme:
+            cfg = cfg.replace(scheme=scheme)
+        if impl:
+            cfg = cfg.replace(impl=impl)
+
+        self.use_mesh = mesh_model * mesh_data > 1
+        if self.use_mesh:
+            from repro.launch.mesh import make_host_mesh
+            self.mesh = make_host_mesh(model=mesh_model, data=mesh_data,
+                                       two_d=cfg.scheme == "2d")
+            self.rules = SH.rules_for(cfg)
+        else:
+            self.mesh = None
+            cfg = cfg.replace(scheme="none")
+            self.rules = RULES_1D
+        self.cfg = cfg
+        self.jcfg = SH.jigsaw_for(cfg).replace(rules=self.rules)
+
+        key = jax.random.PRNGKey(config.seed)
+        # copy init_params: the step donates its buffers, and the caller
+        # may still hold them (e.g. fig56 evaluates the base model after)
+        self.params = M.init(key, cfg) if init_params is None \
+            else jax.tree.map(jnp.copy, init_params)
+        self.adam_cfg = adam.AdamConfig(weight_decay=0.0)
+        self.opt_state = adam.init(self.params, self.adam_cfg)
+        self.lr_fn = partial(
+            sched.warmup_cosine, base_lr=config.lr,
+            warmup_steps=max(config.steps // 10, 1),
+            total_steps=config.steps, min_lr=config.lr * 0.1)
+        # randomized-rollout fine-tuning (paper §6): each update draws a
+        # rollout length r in [1, rollout]; one jitted step per r.
+        self.step_fns = {
+            r: jax.jit(make_train_step(cfg, self.jcfg,
+                                       adam_cfg=self.adam_cfg,
+                                       lr_fn=self.lr_fn, rollout=r,
+                                       accum=config.accum),
+                       donate_argnums=(0, 1))
+            for r in range(1, config.rollout + 1)}
+        r_rng = np.random.default_rng(config.seed + 1)
+        self.r_sched = (
+            r_rng.integers(1, config.rollout + 1, config.steps)
+            if config.rollout > 1 else np.ones(config.steps, np.int64))
+
+        self.pipeline = self._make_pipeline(config.pipeline,
+                                            config.prefetch)
+        self._eval_pipeline: Optional[InputPipeline] = None
+        self._eval_fn = None
+        self.history: List[Dict] = []
+        self.step_idx = 0
+
+    # -- construction helpers -------------------------------------------
+    def _make_pipeline(self, mode: str, prefetch: int) -> InputPipeline:
+        return make_pipeline(self.cfg, mesh=self.mesh, rules=self.rules,
+                             batch_size=self.config.batch,
+                             seq_len=self.config.seq_len, mode=mode,
+                             prefetch=prefetch, seed=self.config.seed)
+
+    def _mesh_ctx(self):
+        return compat.set_mesh(self.mesh) if self.use_mesh \
+            else nullcontext()
+
+    # -- single dispatch -------------------------------------------------
+    def dispatch(self, batch, rollout_len: int = 1) -> Dict[str, float]:
+        """Run one update on ``batch``; returns raw device metrics."""
+        self.params, self.opt_state, metrics = \
+            self.step_fns[rollout_len](self.params, self.opt_state, batch)
+        self.step_idx += 1
+        return metrics
+
+    # -- the loop --------------------------------------------------------
+    def run(self, on_step: Optional[Callable[[int, Dict], None]] = None
+            ) -> List[Dict]:
+        """Train for ``config.steps`` steps; returns the metrics history
+        (same record format as the legacy train() loop)."""
+        c = self.config
+        with self._mesh_ctx():
+            t0 = time.time()
+            it = self.pipeline.iterate(self.r_sched)
+            for i, batch in enumerate(it):
+                metrics = self.dispatch(batch, int(self.r_sched[i]))
+                if i % c.log_every == 0 or i == c.steps - 1:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m["step"] = i
+                    m["wall_s"] = round(time.time() - t0, 1)
+                    self.history.append(m)
+                    print(f"step {i:5d}  loss {m['loss']:.4f}  "
+                          f"lr {m['lr']:.2e}  ({m['wall_s']}s)")
+                if c.eval_every and i and i % c.eval_every == 0:
+                    em = self.evaluate()
+                    self.history.append(dict(em, step=i, eval=True))
+                    print(f"step {i:5d}  val_loss {em['val_loss']:.4f}")
+                if on_step is not None:
+                    on_step(i, metrics)
+                if c.ckpt and c.ckpt_every and i and i % c.ckpt_every == 0:
+                    self.save(f"{c.ckpt}-{i}")
+        if c.ckpt:
+            self.save(c.ckpt)
+            print(f"checkpoint -> {c.ckpt}")
+        if c.metrics_out:
+            import json
+            with open(c.metrics_out, "w") as f:
+                json.dump(self.history, f, indent=1)
+        return self.history
+
+    # -- evaluation ------------------------------------------------------
+    def evaluate(self, n_batches: Optional[int] = None) -> Dict[str, float]:
+        """Mean metrics over held-out batches (step indices offset past
+        the training stream; separate pipeline instance so prefetch and
+        eval never share memo state)."""
+        n = n_batches or self.config.eval_batches
+        if self._eval_pipeline is None:
+            self._eval_pipeline = self._make_pipeline(
+                self.config.pipeline, prefetch=0)
+            self._eval_fn = jax.jit(make_eval_step(self.cfg, self.jcfg))
+        vals: Dict[str, List[float]] = {}
+        with self._mesh_ctx():
+            for j in range(n):
+                b = self._eval_pipeline.get(EVAL_STEP_OFFSET + j)
+                for k, v in self._eval_fn(self.params, b).items():
+                    vals.setdefault(k, []).append(float(v))
+        out = {f"val_{k}": float(np.mean(v)) for k, v in vals.items()}
+        return out
+
+    # -- checkpointing ---------------------------------------------------
+    def save(self, path: str) -> None:
+        ckpt_io.save(path, self.params, self.opt_state, self.step_idx,
+                     extra={"arch": self.arch, "reduced": self.reduced})
+
+    # -- benchmarking ----------------------------------------------------
+    def benchmark(self, steps: int = 10, warmup: int = 2) -> float:
+        """Steady-state seconds per training step (compile + warmup
+        excluded), through the engine's own pipeline -- used by the
+        measured scaling and pipeline-overlap benchmarks."""
+        horizons = np.ones(warmup + steps, np.int64)
+        with self._mesh_ctx():
+            it = self.pipeline.iterate(horizons)
+            for j, batch in enumerate(it):
+                if j == warmup:
+                    jax.block_until_ready(jax.tree.leaves(self.params)[0])
+                    t0 = time.time()
+                self.dispatch(batch, 1)
+            jax.block_until_ready(jax.tree.leaves(self.params)[0])
+        return (time.time() - t0) / steps

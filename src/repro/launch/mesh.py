@@ -5,9 +5,9 @@ state; the dry-run sets XLA_FLAGS before anything else imports jax.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import AxisType, make_mesh
 
-AUTO = jax.sharding.AxisType.Auto
+AUTO = AxisType.Auto
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,7 +16,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     an outer data-parallel axis (the paper's inter-node DP)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AUTO,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AUTO,) * len(axes))
 
 
 def make_production_mesh_2d(*, multi_pod: bool = False):
@@ -25,7 +25,7 @@ def make_production_mesh_2d(*, multi_pod: bool = False):
     shape = (2, 16, 4, 4) if multi_pod else (16, 4, 4)
     axes = (("pod", "data", "mdom", "mtp") if multi_pod
             else ("data", "mdom", "mtp"))
-    return jax.make_mesh(shape, axes, axis_types=(AUTO,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AUTO,) * len(axes))
 
 
 def make_host_mesh(model: int = 4, data: int = 2, *, two_d: bool = False):
@@ -34,7 +34,7 @@ def make_host_mesh(model: int = 4, data: int = 2, *, two_d: bool = False):
         import math
         q = int(math.isqrt(model))
         assert q * q == model
-        return jax.make_mesh((data, q, q), ("data", "mdom", "mtp"),
-                             axis_types=(AUTO,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AUTO,) * 2)
+        return make_mesh((data, q, q), ("data", "mdom", "mtp"),
+                         axis_types=(AUTO,) * 3)
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=(AUTO,) * 2)

@@ -1,11 +1,18 @@
-"""End-to-end training driver.
+"""End-to-end training driver: a thin CLI over ``TrainEngine``.
 
 CPU-runnable (reduced configs, host mesh) and production-shaped (full
 configs on the 16x16 mesh) from the same entry point:
 
   PYTHONPATH=src python -m repro.launch.train --arch weathermixer-1b \
       --reduced --steps 200 --batch 8 [--mesh-model 4 --mesh-data 2] \
-      [--scheme 2d] [--rollout 3] [--ckpt out/ckpt]
+      [--scheme 2d] [--rollout 3] [--ckpt out/ckpt] \
+      [--pipeline sharded|sync-full] [--prefetch 2] [--accum 2]
+
+The input path is the domain-parallel sharded pipeline by default: each
+model-parallel rank generates only its (lon x channel) partition and a
+background thread prefetches ahead of compute (paper §5).
+``--pipeline sync-full`` restores the legacy full-batch host generation
+for A/B comparison; both produce bit-identical batches.
 
 Reduced configs run real optimization on the synthetic pipelines; the
 loss curves in EXPERIMENTS.md come from here.
@@ -13,140 +20,35 @@ loss curves in EXPERIMENTS.md come from here.
 from __future__ import annotations
 
 import argparse
-import json
-import os
-import time
-from functools import partial
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.registry import ARCH_IDS, get_config
-from repro.core.api import JigsawConfig
-from repro.core.sharding import RULES_1D, RULES_2D
-from repro.data.tokens import TokenDataConfig, TokenDataset
-from repro.data.weather import WeatherDataConfig, WeatherDataset
-from repro.launch import shapes as SH
-from repro.launch import specs as S
-from repro.launch.mesh import make_host_mesh
-from repro.models import registry as M
-from repro.optim import adam, schedule as sched
-from repro.checkpoint import io as ckpt_io
-from repro.train.step import make_train_step
-
-
-def make_batch_fn(cfg, seq_len: int, seed: int = 0):
-    """Returns batch_fn(step, batch_size, horizon=1) -> host numpy batch."""
-    if cfg.family == "mixer":
-        ds = WeatherDataset(WeatherDataConfig(
-            lat=cfg.wm_lat, lon=cfg.wm_lon, channels=cfg.wm_channels,
-            seed=seed))
-        return lambda step, bsz, horizon=1: ds.sample_batch(
-            step, bsz, horizon=horizon)
-    tok = TokenDataset(TokenDataConfig(vocab_size=cfg.vocab_size,
-                                       seq_len=seq_len, seed=seed))
-
-    def fn(step, bsz, horizon=1):
-        del horizon
-        batch = tok.sample_batch(step, bsz)
-        if cfg.family == "vlm":
-            rng = np.random.default_rng(step)
-            batch["embeds"] = rng.normal(
-                0, 1, (bsz, cfg.n_patches, cfg.d_model)).astype(np.float32)
-        if cfg.family == "audio":
-            rng = np.random.default_rng(step)
-            batch["frames"] = rng.normal(
-                0, 1, (bsz, cfg.n_frames, cfg.d_model)).astype(np.float32)
-        return batch
-
-    return fn
+from repro.configs.registry import ARCH_IDS
+from repro.launch.engine import EngineConfig, TrainEngine
 
 
 def train(arch: str, *, steps: int = 100, batch: int = 8, seq_len: int = 128,
           reduced: bool = True, mesh_model: int = 1, mesh_data: int = 1,
           scheme: str = None, impl: str = None, rollout: int = 1,
           lr: float = 1e-3, log_every: int = 10, ckpt: str = None,
-          seed: int = 0, metrics_out: str = None, init_params=None):
-    cfg = get_config(arch)
-    if reduced:
-        cfg = cfg.reduced()
-    if scheme:
-        cfg = cfg.replace(scheme=scheme)
-    if impl:
-        cfg = cfg.replace(impl=impl)
+          seed: int = 0, metrics_out: str = None, init_params=None,
+          pipeline: str = "sharded", prefetch: int = 2, accum: int = 1,
+          eval_every: int = 0, config_override=None):
+    """Back-compat functional entry point; returns (history, params).
 
-    use_mesh = mesh_model * mesh_data > 1
-    if use_mesh:
-        mesh = make_host_mesh(model=mesh_model, data=mesh_data,
-                              two_d=cfg.scheme == "2d")
-        rules = SH.rules_for(cfg)
-    else:
-        mesh = None
-        cfg = cfg.replace(scheme="none")
-        rules = RULES_1D
-    jcfg = SH.jigsaw_for(cfg).replace(rules=rules)
-
-    key = jax.random.PRNGKey(seed)
-    # copy init_params: the step donates its buffers, and the caller may
-    # still hold them (e.g. fig56 evaluates the base model afterwards)
-    params = M.init(key, cfg) if init_params is None \
-        else jax.tree.map(jnp.copy, init_params)
-    acfg = adam.AdamConfig(weight_decay=0.0)
-    opt_state = adam.init(params, acfg)
-    lr_fn = partial(sched.warmup_cosine, base_lr=lr,
-                    warmup_steps=max(steps // 10, 1), total_steps=steps,
-                    min_lr=lr * 0.1)
-    # randomized-rollout fine-tuning (paper §6): each update draws a
-    # rollout length r in [1, rollout]; the processor runs r times and
-    # the target is the state r steps ahead.  One jitted step per r.
-    step_fns = {r: jax.jit(make_train_step(cfg, jcfg, adam_cfg=acfg,
-                                           lr_fn=lr_fn, rollout=r),
-                           donate_argnums=(0, 1))
-                for r in range(1, rollout + 1)}
-    batch_fn = make_batch_fn(cfg, seq_len, seed)
-    r_rng = np.random.default_rng(seed + 1)
-    r_sched = (r_rng.integers(1, rollout + 1, steps) if rollout > 1
-               else np.ones(steps, np.int64))
-
-    def run():
-        nonlocal params, opt_state
-        history = []
-        t0 = time.time()
-        for i in range(steps):
-            r = int(r_sched[i])
-            hb = batch_fn(i, batch, horizon=r)
-            b = {k: jnp.asarray(v) for k, v in hb.items()}
-            if use_mesh:
-                bspecs = S.batch_specs(cfg, rules)
-                b = {k: jax.device_put(
-                        v, jax.NamedSharding(mesh, S.sanitize_spec(
-                            v.shape, bspecs.get(k, jax.P()), mesh)))
-                     for k, v in b.items()}
-            params, opt_state, metrics = step_fns[r](params, opt_state, b)
-            if i % log_every == 0 or i == steps - 1:
-                m = {k: float(v) for k, v in metrics.items()}
-                m["step"] = i
-                m["wall_s"] = round(time.time() - t0, 1)
-                history.append(m)
-                print(f"step {i:5d}  loss {m['loss']:.4f}  "
-                      f"lr {m['lr']:.2e}  ({m['wall_s']}s)")
-        return history
-
-    if use_mesh:
-        with jax.set_mesh(mesh):
-            history = run()
-    else:
-        history = run()
-
-    if ckpt:
-        ckpt_io.save(ckpt, params, opt_state, steps,
-                     extra={"arch": arch, "reduced": reduced})
-        print(f"checkpoint -> {ckpt}")
-    if metrics_out:
-        with open(metrics_out, "w") as f:
-            json.dump(history, f, indent=1)
-    return history, params
+    New callers should construct a :class:`TrainEngine` directly --
+    it exposes the same behavior plus eval/checkpoint/benchmark hooks.
+    ``config_override`` replaces the registry config (used by benchmarks
+    and examples that sweep custom model sizes)."""
+    engine = TrainEngine(
+        arch, reduced=reduced, mesh_model=mesh_model, mesh_data=mesh_data,
+        scheme=scheme, impl=impl, init_params=init_params,
+        config_override=config_override,
+        config=EngineConfig(
+            steps=steps, batch=batch, seq_len=seq_len, rollout=rollout,
+            lr=lr, log_every=log_every, ckpt=ckpt, seed=seed,
+            metrics_out=metrics_out, pipeline=pipeline, prefetch=prefetch,
+            accum=accum, eval_every=eval_every))
+    history = engine.run()
+    return history, engine.params
 
 
 def main():
@@ -167,13 +69,25 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--metrics-out", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pipeline", default="sharded",
+                    choices=["sharded", "sync-full"],
+                    help="domain-parallel sharded reads (default) or the "
+                         "legacy full-batch host generation")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="input batches prefetched by the background "
+                         "thread (0 = synchronous)")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="microbatch gradient-accumulation factor")
+    ap.add_argument("--eval-every", type=int, default=0)
     args = ap.parse_args()
     train(args.arch, steps=args.steps, batch=args.batch,
           seq_len=args.seq_len, reduced=not args.full,
           mesh_model=args.mesh_model, mesh_data=args.mesh_data,
           scheme=args.scheme, impl=args.impl, rollout=args.rollout,
           lr=args.lr, ckpt=args.ckpt, seed=args.seed,
-          metrics_out=args.metrics_out)
+          metrics_out=args.metrics_out, pipeline=args.pipeline,
+          prefetch=args.prefetch, accum=args.accum,
+          eval_every=args.eval_every)
 
 
 if __name__ == "__main__":

@@ -43,23 +43,57 @@ def loss_fn(params, batch, cfg: ModelConfig, jcfg: JigsawConfig,
 
 def make_train_step(cfg: ModelConfig, jcfg: JigsawConfig,
                     adam_cfg: adam.AdamConfig = adam.AdamConfig(),
-                    lr_fn: Callable = None, rollout: int = 1):
+                    lr_fn: Callable = None, rollout: int = 1,
+                    accum: int = 1):
     """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
 
     ``rollout`` > 1 enables the paper's randomized-rollout fine-tuning
     (mixer only): the processor runs ``rollout`` times per update.
+
+    ``accum`` > 1 enables microbatch gradient accumulation: the batch's
+    leading dim is split into ``accum`` consecutive microbatches scanned
+    sequentially, gradients averaged in f32 before one optimizer update.
+    Mathematically the full-batch update (losses are per-element means
+    over equal-sized microbatches) at 1/accum the activation memory.
     """
     lr_fn = lr_fn or partial(sched.warmup_cosine)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
-    def train_step(params, opt_state, batch):
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, batch, cfg, jcfg, rollout)
+    def apply_update(params, opt_state, grads, metrics):
         lr = lr_fn(opt_state["step"])
         new_params, new_opt = adam.update(params, grads, opt_state, lr,
                                           adam_cfg)
-        metrics = dict(metrics, lr=lr,
-                       grad_norm=adam.global_norm(grads))
+        metrics = dict(metrics, lr=lr, grad_norm=adam.global_norm(grads))
         return new_params, new_opt, metrics
+
+    if accum == 1:
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = grad_fn(params, batch, cfg, jcfg,
+                                             rollout)
+            return apply_update(params, opt_state, grads, metrics)
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        def split(v):
+            if v.shape[0] % accum != 0:
+                raise ValueError(
+                    f"batch dim {v.shape[0]} not divisible by accum={accum}")
+            return v.reshape((accum, v.shape[0] // accum) + v.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(gsum, mb):
+            (_, metrics), grads = grad_fn(params, mb, cfg, jcfg, rollout)
+            gsum = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+            return gsum, metrics
+
+        gsum = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        gsum, stacked = jax.lax.scan(body, gsum, micro)
+        grads = jax.tree.map(lambda g: g / accum, gsum)
+        metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), stacked)
+        return apply_update(params, opt_state, grads, metrics)
 
     return train_step
 

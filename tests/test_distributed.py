@@ -17,6 +17,8 @@ SCENARIOS = [
     "weathermixer_schemes",
     "transformer_1d",
     "train_step_mesh",
+    "input_pipeline",
+    "engine_pipeline",
 ]
 
 
