@@ -2,8 +2,8 @@
 
 Shows, on an 8-device host mesh:
   1. zero memory redundancy: per-device parameter bytes = total / n_model;
-  2. the collective schedule of each impl (ring / rs / allreduce / gspmd)
-     on one mixer MLP, from the compiled HLO;
+  2. the collective schedule of each impl (ring / ring_chunked / rs /
+     allreduce / gspmd) on one mixer MLP, from the compiled HLO;
   3. 2-way vs 4-way (1-D vs 2-D/Cannon) numerical equivalence.
 
   python examples/jigsaw_scaling.py
@@ -44,7 +44,7 @@ def main():
             for v in jax.tree.leaves(sharded))
         print(f"param bytes total={total}  per-device={per_dev}  "
               f"ratio={total / per_dev:.1f} (= n_model: zero redundancy)")
-        for impl in ["ring", "rs", "allreduce", "gspmd"]:
+        for impl in ["ring", "ring_chunked", "rs", "allreduce", "gspmd"]:
             cfg = JigsawConfig(impl=impl)
             comp = jax.jit(lambda p, v: mlp_apply(p, v, cfg)).lower(
                 sharded, x).compile()

@@ -72,7 +72,9 @@ class ModelConfig:
     compute_dtype: str = "bfloat16"
     # --- parallelism defaults (overridable from the launcher) ---
     scheme: str = "1d"                     # jigsaw scheme: 1d|2d|none
-    impl: str = "rs"                       # 1d impl: ring|rs|gspmd|allreduce
+    impl: str = "rs"                       # 1d impl: ring|ring_chunked|rs|
+                                           #          gspmd|allreduce
+    kernel: str = "xla"                    # local GEMM engine: xla|pallas
     shard_params_over_data: bool = False   # FSDP-hybrid for >~25B params
     remat: bool = True
     # --- capability flags ---
@@ -124,6 +126,9 @@ class ModelConfig:
             n_layers=2, d_model=min(self.d_model, 256),
             param_dtype="float32", compute_dtype="float32",
             scheme="none", remat=False, shard_params_over_data=False,
+            # pallas on CPU is interpret-mode (slow): smoke tests opt in
+            # explicitly instead of inheriting the production default
+            kernel="xla",
         )
         if self.n_heads:
             kw["n_heads"] = min(self.n_heads, 4)

@@ -16,6 +16,10 @@ def _wm(name, d_emb, d_tok, d_ch, n_layers=3, lat=728, lon=1440, chans=69,
         wm_lat=lat, wm_lon=lon, wm_channels=chans, wm_patch=patch,
         wm_d_tok=d_tok, wm_d_ch=d_ch,
         norm="layernorm", scheme="2d",
+        # production compute engine: MXU-tiled Pallas GEMMs; when launched
+        # with scheme="1d" the ring runs the paper's chunked overlap
+        # schedule (DESIGN.md §8).  reduced() resets both for CPU smoke.
+        kernel="pallas", impl="ring_chunked",
         supports_decode=False, supports_long_context=False,
         source="Kieckhefen et al. 2025 (the reproduced paper), §6.2/Table 1",
     )

@@ -4,12 +4,24 @@ Everything in this framework is a pure function over parameter pytrees
 (nested dicts of jax.Arrays).  ``JigsawConfig`` selects how each linear
 layer completes its distributed contraction:
 
-  scheme="1d", impl in {"ring","rs","gspmd","allreduce"}   (paper 2-way, n-way)
-  scheme="2d"                                               (paper 4-way, Cannon)
+  scheme="1d", impl in {"ring","ring_chunked","rs","gspmd","allreduce"}
+                                                (paper 2-way, n-way)
+  scheme="2d"                                   (paper 4-way, Cannon)
 
-``impl="rs"`` (psum_scatter) is the default production path; ``"ring"`` is
-the paper-faithful explicit schedule; ``"gspmd"`` lets XLA derive the
+``impl="rs"`` (psum_scatter) is the default production path;
+``"ring_chunked"`` is the paper's own schedule (one output-chunk GEMM
+issued before each hop so send overlaps compute); ``"ring"`` is the
+monolithic-GEMM approximation of it; ``"gspmd"`` lets XLA derive the
 collectives from sharding constraints alone (beyond-paper comparison).
+
+``kernel`` selects the compute engine of every local GEMM: ``"xla"``
+(dot_general) or ``"pallas"`` (the MXU-tiled blocked kernel,
+kernels/block_matmul.py -- f32 VMEM accumulation, and where the
+contraction is already complete, i.e. the undistributed scheme="none"
+path, the bias add and GELU ride the kernel's fused epilogue).  Under a
+distributed scheme the epilogue cannot fuse: the partial products are
+incomplete until the reduce-scatter / ring finishes, so bias/activation
+apply after the collective (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -31,6 +43,7 @@ class JigsawConfig:
     impl: str = "rs"              # for scheme="1d"
     accum_dtype: Optional[jnp.dtype] = jnp.float32
     fsdp: bool = False            # weights also sharded over data (huge archs)
+    kernel: str = "xla"           # "xla" | "pallas" (local GEMM engine)
 
     def replace(self, **kw) -> "JigsawConfig":
         return dataclasses.replace(self, **kw)
@@ -70,22 +83,40 @@ def linear_init(key: jax.Array, d_in: int, d_out: int, *,
 
 
 def linear_apply(params, x: jax.Array, cfg: JigsawConfig = DEFAULT_JIGSAW,
-                 *, domain_dim: int = -2) -> jax.Array:
+                 *, domain_dim: int = -2,
+                 epilogue: str = "none") -> jax.Array:
+    """``y = epilogue(x @ w.T + b)``.
+
+    ``epilogue`` ("none" | "gelu" | "silu") only fuses into the GEMM on
+    the undistributed pallas path, where the contraction is complete
+    inside the kernel; distributed schemes apply it after the collective.
+    """
     w = params["w"]
     b = params.get("b")
+    act = None if epilogue == "none" else getattr(jax.nn, epilogue)
     if cfg.scheme == "2d":
-        return jigsaw.jigsaw_linear_2d(x, w, b, rules=cfg.rules,
-                                       domain_dim=domain_dim,
-                                       accum_dtype=cfg.accum_dtype)
-    if cfg.scheme == "1d":
-        return jigsaw.jigsaw_linear(x, w, b, rules=cfg.rules, impl=cfg.impl,
+        y = jigsaw.jigsaw_linear_2d(x, w, b, rules=cfg.rules,
+                                    domain_dim=domain_dim,
                                     accum_dtype=cfg.accum_dtype,
-                                    w_data_sharded=cfg.fsdp)
-    # scheme="none": plain local matmul (single-device / tests)
+                                    kernel=cfg.kernel)
+        return y if act is None else act(y)
+    if cfg.scheme == "1d":
+        y = jigsaw.jigsaw_linear(x, w, b, rules=cfg.rules, impl=cfg.impl,
+                                 accum_dtype=cfg.accum_dtype,
+                                 w_data_sharded=cfg.fsdp,
+                                 kernel=cfg.kernel)
+        return y if act is None else act(y)
+    # scheme="none": plain local matmul (single-device / inside-shard_map)
+    if cfg.kernel == "pallas":
+        # contraction completes in-kernel: bias + activation ride the
+        # fused epilogue, the activation never round-trips to HBM.
+        from repro.kernels import ops
+        return ops.matmul_nd(x, w, b, epilogue=epilogue)
     y = jax.lax.dot_general(
         x, w, (((x.ndim - 1,), (1,)), ((), ())),
         preferred_element_type=cfg.accum_dtype or x.dtype).astype(x.dtype)
-    return y if b is None else y + b
+    y = y if b is None else y + b
+    return y if act is None else act(y)
 
 
 # ---------------------------------------------------------------------------
@@ -101,6 +132,15 @@ def mlp_init(key: jax.Array, d_in: int, d_hidden: int, d_out: int, *,
 
 def mlp_apply(params, x: jax.Array, cfg: JigsawConfig = DEFAULT_JIGSAW,
               *, activation=jax.nn.gelu, domain_dim: int = -2) -> jax.Array:
+    if cfg.kernel == "pallas" and cfg.scheme == "none" \
+            and activation is jax.nn.gelu:
+        # Fused two-GEMM path (the WeatherMixer mixing MLPs and every
+        # gelu-kind encoder/decoder FFN): the first GEMM's bias + GELU
+        # run in its VMEM epilogue, the hidden activation feeds the
+        # second GEMM without an unfused elementwise pass between.
+        from repro.kernels import ops
+        return ops.mixer_mlp(x, params["fc1"]["w"], params["fc1"].get("b"),
+                             params["fc2"]["w"], params["fc2"].get("b"))
     h = linear_apply(params["fc1"], x, cfg, domain_dim=domain_dim)
     h = activation(h)
     return linear_apply(params["fc2"], h, cfg, domain_dim=domain_dim)

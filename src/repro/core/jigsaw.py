@@ -15,17 +15,28 @@ TPU/JAX adaptation (see DESIGN.md §2):
   sharded along its last dim -- the same layout as the input, so layers
   compose without any re-sharding and no weight is ever allgathered.
 
-  Three interchangeable implementations:
-    - ``ring``  : explicit ppermute ring of partial-sum chunks.  This IS
-                  the paper's algorithm: at every step a rank adds its
-                  locally-computed chunk to the accumulator received from
-                  its neighbour, so each hop's send overlaps the next
-                  chunk's compute.
+  Four interchangeable implementations:
+    - ``ring``  : explicit ppermute ring of partial-sum chunks.  The whole
+                  local partial product is computed up-front with ONE GEMM
+                  and the ring then only moves chunks of it -- an
+                  approximation of the paper's schedule with zero
+                  guaranteed overlap (the compute is finished before the
+                  first hop is issued).
+    - ``ring_chunked`` : the paper's actual algorithm.  The local weight
+                  block is split into p output-chunks and chunk j's GEMM
+                  is issued immediately before hop j's ppermute, so every
+                  hop's send can overlap the NEXT chunk's compute ("each
+                  hop's send overlaps the next chunk's compute", §4).
     - ``rs``    : ``jax.lax.psum_scatter`` -- XLA's native reduce-scatter,
                   which lowers to the same ring on the ICI torus but lets
                   the compiler schedule the overlap.
     - ``gspmd`` : no explicit collectives; sharding constraints only.  XLA
                   GSPMD derives the schedule.  (beyond-paper comparison)
+
+  The local GEMMs route through either XLA's dot_general or the MXU-tiled
+  Pallas kernel (``kernel="pallas"``, kernels/block_matmul.py): f32 VMEM
+  accumulation, differentiable via a custom VJP whose backward GEMMs run
+  the same kernel.
 
 * **2-D Jigsaw** (paper §4.2, "4-way", generalized here to p x q): X is
   sharded over (token/longitude x channel) and W over (out x in) blocks;
@@ -50,7 +61,8 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import get_abstract_mesh, shard_map
 from repro.core.sharding import ShardingRules, constrain
 
-Impl1D = ("ring", "rs", "gspmd", "allreduce")
+Impl1D = ("ring", "ring_chunked", "rs", "gspmd", "allreduce")
+Kernels = ("xla", "pallas")
 
 
 # --------------------------------------------------------------------------
@@ -121,24 +133,80 @@ def ring_all_gather(x: jax.Array, axis_name: str, axis_size: int,
 # --------------------------------------------------------------------------
 
 def _local_matmul(x: jax.Array, w: jax.Array,
-                  accum_dtype: Optional[jnp.dtype]) -> jax.Array:
-    """x: [..., d_local], w: [m, d_local] -> [..., m] (partial sum)."""
+                  accum_dtype: Optional[jnp.dtype],
+                  kernel: str = "xla") -> jax.Array:
+    """x: [..., d_local], w: [m, d_local] -> [..., m] (partial sum).
+
+    ``kernel="pallas"`` routes through the MXU-tiled blocked GEMM
+    (kernels/ops.matmul: f32 VMEM accumulation, custom VJP); the result
+    comes back in x.dtype, which is what every caller reduces in anyway.
+    """
+    if kernel == "pallas":
+        from repro.kernels import ops
+        return ops.matmul_nd(x, w, None, epilogue="none")
     out = jax.lax.dot_general(
         x, w, (((x.ndim - 1,), (1,)), ((), ())),
         preferred_element_type=accum_dtype or x.dtype)
     return out
 
 
+def ring_matmul_chunked(x: jax.Array, w: jax.Array, *, axis_name: str,
+                        axis_size: int,
+                        accum_dtype: Optional[jnp.dtype] = jnp.float32,
+                        kernel: str = "xla") -> jax.Array:
+    """Chunk-granular fused compute/communication ring (paper §4).
+
+    Instead of one local GEMM followed by a reduce-scatter of its output
+    (``ring``/``rs``), the local weight block w [m, d/p] is split into p
+    output-chunks of m/p rows and chunk j's GEMM is computed immediately
+    before hop j's ppermute.  The schedule visits exactly the chunk order
+    of ``ring_reduce_scatter``, so the result is bit-identical; the
+    difference is that each hop's send is issued while the *next* chunk's
+    GEMM is still pending, giving XLA (and the ICI DMA engines) a
+    dependency graph in which communication overlaps computation -- the
+    paper's "each hop's send overlaps the next chunk's compute".
+    """
+    p = axis_size
+    if p == 1:
+        return _local_matmul(x, w, accum_dtype, kernel).astype(x.dtype)
+    m = w.shape[0]
+    if m % p != 0:
+        raise ValueError(
+            f"ring_matmul_chunked: out dim {m} not divisible by {p}")
+    chunk = m // p
+    idx = jax.lax.axis_index(axis_name)
+
+    def chunk_mm(j):
+        # GEMM of one output-chunk: x @ w[j*chunk:(j+1)*chunk].T -- the
+        # reduction stays in compute dtype, same as the other impls.
+        wj = jax.lax.dynamic_slice_in_dim(w, j * chunk, chunk, axis=0)
+        return _local_matmul(x, wj, accum_dtype, kernel).astype(x.dtype)
+
+    perm = [(i, (i + 1) % p) for i in range(p)]
+    # Same walk as ring_reduce_scatter: start with the chunk destined for
+    # our successor; after p-1 hop+compute steps the accumulator is chunk
+    # ``idx`` of the global sum.
+    acc = chunk_mm((idx + p - 1) % p)
+    for s in range(p - 1):
+        acc = jax.lax.ppermute(acc, axis_name, perm)
+        acc = acc + chunk_mm((idx - 2 - s) % p)
+    return acc
+
+
 def jigsaw_matmul_1d(x: jax.Array, w: jax.Array, *, axis_name: str,
                      axis_size: int, impl: str = "rs",
-                     accum_dtype: Optional[jnp.dtype] = jnp.float32
-                     ) -> jax.Array:
+                     accum_dtype: Optional[jnp.dtype] = jnp.float32,
+                     kernel: str = "xla") -> jax.Array:
     """Manual (inside-shard_map) 1-D Jigsaw matmul.
 
     x: local [..., d/p] block; w: local [m, d/p] block.
     Returns the local [..., m/p] block of ``X @ W.T``.
     """
-    partial_sum = _local_matmul(x, w, accum_dtype)
+    if impl == "ring_chunked":
+        return ring_matmul_chunked(
+            x, w, axis_name=axis_name, axis_size=axis_size,
+            accum_dtype=accum_dtype, kernel=kernel).astype(x.dtype)
+    partial_sum = _local_matmul(x, w, accum_dtype, kernel)
     # reduce in the compute dtype: halves collective bytes (and the
     # transposed allgather in backward) at negligible accuracy cost
     partial_sum = partial_sum.astype(x.dtype)
@@ -169,7 +237,8 @@ def _present_batch_axes(mesh, rules: ShardingRules):
 def jigsaw_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
                   *, rules: ShardingRules, mesh=None, impl: str = "rs",
                   accum_dtype: Optional[jnp.dtype] = jnp.float32,
-                  w_data_sharded: bool = False) -> jax.Array:
+                  w_data_sharded: bool = False,
+                  kernel: str = "xla") -> jax.Array:
     """Public 1-D Jigsaw linear: ``y = x @ w.T (+ b)``.
 
     Layouts (global view):
@@ -197,6 +266,9 @@ def jigsaw_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     uneven = (x.shape[-1] % p != 0) or (w.shape[0] % p != 0) \
         or (w.shape[1] % p != 0)
     if impl == "gspmd" or p == 1 or uneven:
+        # GSPMD path stays on dot_general: a pallas_call is an opaque
+        # custom call GSPMD cannot partition, so the kernel knob only
+        # applies where we hold the local blocks (shard_map / no mesh).
         y = jax.lax.dot_general(
             x, w, (((x.ndim - 1,), (1,)), ((), ())),
             preferred_element_type=accum_dtype or x.dtype).astype(x.dtype)
@@ -235,7 +307,8 @@ def jigsaw_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
             # FSDP-hybrid: gather the out-dim weight shards over data.
             wl = jax.lax.all_gather(wl, fsdp_axis, axis=0, tiled=True)
         return jigsaw_matmul_1d(xl, wl, axis_name=tp, axis_size=p,
-                                impl=impl, accum_dtype=accum_dtype)
+                                impl=impl, accum_dtype=accum_dtype,
+                                kernel=kernel)
 
     # check_vma=False: with B=1 (long_500k) the batch stays replicated
     # and VMA inference cannot see through the FSDP all_gather; the
@@ -267,8 +340,8 @@ def _skew(x: jax.Array, amount: jax.Array, axis_name: str, q: int
 
 def jigsaw_matmul_2d(x: jax.Array, w: jax.Array, *, dom_axis: str,
                      tp_axis: str, dom_size: int, tp_size: int,
-                     accum_dtype: Optional[jnp.dtype] = jnp.float32
-                     ) -> jax.Array:
+                     accum_dtype: Optional[jnp.dtype] = jnp.float32,
+                     kernel: str = "xla") -> jax.Array:
     """Manual (inside-shard_map) 2-D Jigsaw matmul via Cannon's algorithm.
 
     Global math: Y[n, m] = X[n, d] @ W[m, d].T on a (dom=p) x (tp=q) grid
@@ -295,9 +368,13 @@ def jigsaw_matmul_2d(x: jax.Array, w: jax.Array, *, dom_axis: str,
     j = jax.lax.axis_index(tp_axis)
 
     def mm(a, b):
-        return jax.lax.dot_general(
-            a, b, (((a.ndim - 1,), (1,)), ((), ())),
-            preferred_element_type=accum_dtype or a.dtype)
+        # Same [..., k] x [n, k] contraction as the 1-D local block, so
+        # the Cannon multiply-accumulate steps ride the kernel knob too.
+        # The pallas kernel returns x.dtype (its f32 accumulation is
+        # internal); cast back up so the q cross-step partial sums
+        # accumulate in accum_dtype on both engines.
+        out = _local_matmul(a, b, accum_dtype, kernel)
+        return out.astype(accum_dtype) if accum_dtype else out
 
     a = _skew(x, i, tp_axis, q)     # now holds X(i, (j+i) % q)
     bm = _skew(w, j, dom_axis, q)   # now holds W(j, (i+j) % q)
@@ -313,8 +390,8 @@ def jigsaw_matmul_2d(x: jax.Array, w: jax.Array, *, dom_axis: str,
 def jigsaw_linear_2d(x: jax.Array, w: jax.Array,
                      b: Optional[jax.Array] = None, *, rules: ShardingRules,
                      mesh=None, domain_dim: int = -2,
-                     accum_dtype: Optional[jnp.dtype] = jnp.float32
-                     ) -> jax.Array:
+                     accum_dtype: Optional[jnp.dtype] = jnp.float32,
+                     kernel: str = "xla") -> jax.Array:
     """Public 2-D Jigsaw linear (paper's 4-way, generalized).
 
     Global layouts:
@@ -348,7 +425,7 @@ def jigsaw_linear_2d(x: jax.Array, w: jax.Array,
     manual = {dom, tp} | set(batch_axes)
 
     fn = partial(jigsaw_matmul_2d, dom_axis=dom, tp_axis=tp, dom_size=p,
-                 tp_size=q, accum_dtype=accum_dtype)
+                 tp_size=q, accum_dtype=accum_dtype, kernel=kernel)
     y = shard_map(fn, mesh=mesh, in_specs=(xspec, wspec),
                       out_specs=ospec, axis_names=manual,
                       check_vma=False)(x, w)
@@ -471,6 +548,50 @@ def comm_volume_megatron_pair(tokens: int, d: int, p: int,
     # Megatron fuses two linears around one allreduce of [tokens, d]:
     # ring allreduce = 2 (p-1)/p * bytes.
     return CommVolume("megatron-pair", 2 * (p - 1) / p * tokens * d * dtype_bytes)
+
+@dataclasses.dataclass(frozen=True)
+class CommSchedule:
+    """Per-hop accounting of an explicit ring schedule (one linear fwd).
+
+    ``flops_per_hop`` is the local GEMM work the schedule exposes
+    *between* consecutive sends -- the compute available to hide each
+    hop.  The monolithic ``ring`` finishes its single GEMM before hop 0,
+    so it exposes zero overlappable work; ``ring_chunked`` exposes one
+    output-chunk GEMM per hop (the paper's overlap).
+    """
+    scheme: str
+    hops: int
+    bytes_per_hop: float
+    flops_per_hop: float
+    bytes_per_device: float
+
+    def overlap_ratio(self, ici_bw: float, peak_flops: float) -> float:
+        """compute-time / comm-time per hop (>= 1: the hop is hidden)."""
+        if self.bytes_per_hop == 0:
+            return float("inf")
+        t_comm = self.bytes_per_hop / ici_bw
+        t_comp = self.flops_per_hop / peak_flops
+        return t_comp / t_comm if t_comm else float("inf")
+
+
+def comm_schedule_jigsaw_1d(tokens: int, m: int, d_local: int, p: int,
+                            dtype_bytes: int = 2, chunked: bool = True
+                            ) -> CommSchedule:
+    """Hop-level schedule of the explicit 1-D Jigsaw ring.
+
+    Both schedules move the same (p-1)/p * tokens * m bytes per device;
+    they differ only in what compute is still pending while each hop's
+    send is in flight (2 * tokens * d_local * m/p flops per output-chunk
+    GEMM for the chunked ring, none for the monolithic one).
+    """
+    hop_bytes = tokens * (m / p) * dtype_bytes
+    chunk_flops = 2.0 * tokens * d_local * (m / p)
+    return CommSchedule(
+        scheme="jigsaw-1d-" + ("ring_chunked" if chunked else "ring"),
+        hops=p - 1, bytes_per_hop=hop_bytes,
+        flops_per_hop=chunk_flops if chunked else 0.0,
+        bytes_per_device=(p - 1) * hop_bytes)
+
 
 def comm_volume_jigsaw_2d(tokens: int, m: int, q: int, dtype_bytes: int = 2
                           ) -> CommVolume:

@@ -1,8 +1,19 @@
-"""jit'd public wrappers around the Pallas kernels (padding + reshapes).
+"""jit'd public wrappers around the Pallas kernels (padding + reshapes +
+custom VJPs).
+
+``matmul`` is the MXU-tiled GEMM used as Jigsaw's compute engine
+(``JigsawConfig(kernel="pallas")``): f32 VMEM accumulation, bias + GELU /
+SiLU epilogue fused into the final K-step.  Block sizes shrink toward the
+problem size (keeping the sublane/lane alignment floors) so a 16-row GEMM
+does not pad to a 256-row tile.  A custom VJP makes the path trainable:
+the backward GEMMs (dx = dz @ w, dw = dz^T @ x) are themselves routed
+through the same Pallas kernel, and fused epilogues recompute their
+pre-activation with one extra kernel call (flash-attention-style
+recomputation) instead of saving it.
 
 ``mixer_mlp`` is the drop-in fused path for the WeatherMixer mixing MLPs:
 two MXU-tiled GEMMs with the GELU fused into the first's epilogue.  The
-wrapper pads every dim up to the block grid and slices the result back.
+wrappers pad every dim up to the block grid and slice the result back.
 """
 from __future__ import annotations
 
@@ -14,6 +25,8 @@ import jax.numpy as jnp
 
 from repro.kernels.block_matmul import block_matmul
 
+_ACTS = {"gelu": jax.nn.gelu, "silu": jax.nn.silu}
+
 
 def _pad_to(a: jax.Array, dim: int, mult: int) -> jax.Array:
     rem = a.shape[dim] % mult
@@ -24,28 +37,103 @@ def _pad_to(a: jax.Array, dim: int, mult: int) -> jax.Array:
     return jnp.pad(a, pad)
 
 
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def _sublane(dtype) -> int:
+    """Minimum second-to-last tile dim for ``dtype`` (f32 8, bf16 16...)."""
+    return {4: 8, 2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
+
+
+def block_dims(m: int, n: int, k: int, *, block_m: int, block_n: int,
+               block_k: int, dtype=jnp.float32):
+    """Shrink the requested block sizes toward the problem size.
+
+    m shrinks to its sublane-aligned ceiling, n and k to their lane (128)
+    ceilings, so small GEMMs run a single right-sized block instead of
+    padding up to the full default tile (a 16-row f32 GEMM runs a 16-row
+    block, not a 256-row one).
+    """
+    bm = min(block_m, _round_up(m, _sublane(dtype)))
+    bn = min(block_n, _round_up(n, 128))
+    bk = min(block_k, _round_up(k, 128))
+    return bm, bn, bk
+
+
+def _matmul_raw(x, w, b, epilogue, block_m, block_n, block_k, interpret):
+    """Pad/shrink to the block grid, run the kernel, slice back."""
+    m, k = x.shape
+    n = w.shape[0]
+    bm, bn, bk = block_dims(m, n, k, block_m=block_m, block_n=block_n,
+                            block_k=block_k, dtype=x.dtype)
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bn), 1, bk)
+    bp = _pad_to(b, 0, bn) if b is not None else None
+    y = block_matmul(xp, wp, bp, block_m=bm, block_n=bn, block_k=bk,
+                     epilogue=epilogue, interpret=interpret)
+    return y[:m, :n]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _matmul(x, w, b, epilogue, block_m, block_n, block_k, interpret):
+    return _matmul_raw(x, w, b, epilogue, block_m, block_n, block_k,
+                       interpret)
+
+
+def _matmul_fwd(x, w, b, epilogue, block_m, block_n, block_k, interpret):
+    y = _matmul_raw(x, w, b, epilogue, block_m, block_n, block_k, interpret)
+    return y, (x, w, b)
+
+
+def _matmul_bwd(epilogue, block_m, block_n, block_k, interpret, res, dy):
+    x, w, b = res
+    blk = (block_m, block_n, block_k, interpret)
+    if epilogue == "none":
+        dz = dy
+    else:
+        # Recompute the pre-activation z = x @ w.T + b with one more
+        # kernel call (cheaper than saving the [M, N] f32 accumulator).
+        z = _matmul_raw(x, w, b, "none", *blk).astype(jnp.float32)
+        _, act_vjp = jax.vjp(_ACTS[epilogue], z)
+        dz = act_vjp(dy.astype(jnp.float32))[0].astype(dy.dtype)
+    # Backward GEMMs through the same MXU-tiled kernel:
+    #   dx[m, k] = dz @ w   and   dw[n, k] = dz^T @ x.
+    dx = _matmul_raw(dz, w.T, None, "none", *blk).astype(x.dtype)
+    dw = _matmul_raw(dz.T, x.T, None, "none", *blk).astype(w.dtype)
+    db = jnp.sum(dz, axis=0).astype(b.dtype) if b is not None else None
+    return dx, dw, db
+
+
+_matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
 @partial(jax.jit, static_argnames=("epilogue", "block_m", "block_n",
                                    "block_k", "interpret"))
 def matmul(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None, *,
            epilogue: str = "none", block_m: int = 256, block_n: int = 256,
            block_k: int = 512, interpret: bool = None) -> jax.Array:
-    """Padded/blocked y = epilogue(x @ w.T + b) for arbitrary 2-D shapes."""
-    m, k = x.shape
-    n = w.shape[0]
-    bm = min(block_m, max(8, m))
-    xp = _pad_to(_pad_to(x, 0, block_m), 1, block_k)
-    wp = _pad_to(_pad_to(w, 0, block_n), 1, block_k)
-    bp = _pad_to(b, 0, block_n) if b is not None else None
-    y = block_matmul(xp, wp, bp, block_m=block_m, block_n=block_n,
-                     block_k=block_k, epilogue=epilogue,
-                     interpret=interpret)
-    return y[:m, :n]
+    """Padded/blocked y = epilogue(x @ w.T + b) for arbitrary 2-D shapes.
+
+    Differentiable (custom VJP; backward GEMMs also run the Pallas
+    kernel), so it can sit inside the distributed training hot path.
+    """
+    return _matmul(x, w, b, epilogue, block_m, block_n, block_k, interpret)
+
+
+def matmul_nd(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+              **kw) -> jax.Array:
+    """``matmul`` over the last dim of an arbitrary-rank x [..., d_in]."""
+    lead = x.shape[:-1]
+    y = matmul(x.reshape(-1, x.shape[-1]), w, b, **kw)
+    return y.reshape(lead + (w.shape[0],))
 
 
 @partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                    "interpret"))
-def mixer_mlp(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array,
-              b2: jax.Array, *, block_m: int = 256, block_n: int = 256,
+def mixer_mlp(x: jax.Array, w1: jax.Array, b1: Optional[jax.Array],
+              w2: jax.Array, b2: Optional[jax.Array], *,
+              block_m: int = 256, block_n: int = 256,
               block_k: int = 512, interpret: bool = None) -> jax.Array:
     """Fused mixer MLP over the last dim: gelu(x @ w1.T + b1) @ w2.T + b2.
 

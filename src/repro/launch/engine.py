@@ -62,6 +62,7 @@ class EngineConfig:
     eval_every: int = 0        # 0 = no mid-training eval
     eval_batches: int = 2
     accum: int = 1             # microbatch gradient accumulation
+    zero1: bool = False        # ZeRO-1: shard optimizer moments over data
     ckpt: Optional[str] = None
     ckpt_every: int = 0        # 0 = only a final checkpoint (if ckpt set)
     seed: int = 0
@@ -76,6 +77,7 @@ class TrainEngine:
     def __init__(self, arch: str, *, reduced: bool = True,
                  mesh_model: int = 1, mesh_data: int = 1,
                  scheme: Optional[str] = None, impl: Optional[str] = None,
+                 kernel: Optional[str] = None,
                  config: EngineConfig = EngineConfig(),
                  init_params=None, config_override=None):
         self.arch = arch
@@ -89,6 +91,8 @@ class TrainEngine:
             cfg = cfg.replace(scheme=scheme)
         if impl:
             cfg = cfg.replace(impl=impl)
+        if kernel:
+            cfg = cfg.replace(kernel=kernel)
 
         self.use_mesh = mesh_model * mesh_data > 1
         if self.use_mesh:
@@ -110,19 +114,38 @@ class TrainEngine:
             else jax.tree.map(jnp.copy, init_params)
         self.adam_cfg = adam.AdamConfig(weight_decay=0.0)
         self.opt_state = adam.init(self.params, self.adam_cfg)
+        # ZeRO-1 (ROADMAP PR-1 leftover, DESIGN.md §6.5): moments sharded
+        # over the data axis; the step output is pinned to the same
+        # layout so the sharding survives across updates, and GSPMD
+        # allgathers only the fresh params (classic ZeRO-1 schedule).
+        self._opt_shardings = None
+        if config.zero1 and self.use_mesh:
+            self._opt_shardings = self._zero1_shardings()
+            self.opt_state = jax.device_put(self.opt_state,
+                                            self._opt_shardings)
         self.lr_fn = partial(
             sched.warmup_cosine, base_lr=config.lr,
             warmup_steps=max(config.steps // 10, 1),
             total_steps=config.steps, min_lr=config.lr * 0.1)
+
+        def _jit_step(r: int):
+            fn = make_train_step(cfg, self.jcfg, adam_cfg=self.adam_cfg,
+                                 lr_fn=self.lr_fn, rollout=r,
+                                 accum=config.accum)
+            if self._opt_shardings is not None:
+                base, osh = fn, self._opt_shardings
+
+                def fn(params, opt_state, batch):
+                    p, o, m = base(params, opt_state, batch)
+                    o = jax.tree.map(jax.lax.with_sharding_constraint,
+                                     o, osh)
+                    return p, o, m
+            return jax.jit(fn, donate_argnums=(0, 1))
+
         # randomized-rollout fine-tuning (paper §6): each update draws a
         # rollout length r in [1, rollout]; one jitted step per r.
-        self.step_fns = {
-            r: jax.jit(make_train_step(cfg, self.jcfg,
-                                       adam_cfg=self.adam_cfg,
-                                       lr_fn=self.lr_fn, rollout=r,
-                                       accum=config.accum),
-                       donate_argnums=(0, 1))
-            for r in range(1, config.rollout + 1)}
+        self.step_fns = {r: _jit_step(r)
+                         for r in range(1, config.rollout + 1)}
         r_rng = np.random.default_rng(config.seed + 1)
         self.r_sched = (
             r_rng.integers(1, config.rollout + 1, config.steps)
@@ -136,6 +159,19 @@ class TrainEngine:
         self.step_idx = 0
 
     # -- construction helpers -------------------------------------------
+    def _zero1_shardings(self):
+        """NamedShardings for the ZeRO-1 optimizer state: moments inherit
+        the param specs plus a data-axis shard on their first evenly
+        divisible unsharded dim (launch/specs.opt_specs)."""
+        from repro.launch import specs as S
+        pspecs = S.param_specs(self.params, self.cfg, self.rules, self.mesh)
+        pspecs = S.sanitize_tree(self.params, pspecs, self.mesh)
+        ospecs = S.opt_specs(self.opt_state["mu"], pspecs,
+                             zero1_axis=self.rules.batch_axes[-1],
+                             mesh=self.mesh)
+        ospecs = S.sanitize_tree(self.opt_state, ospecs, self.mesh)
+        return S.to_shardings(ospecs, self.mesh)
+
     def _make_pipeline(self, mode: str, prefetch: int) -> InputPipeline:
         return make_pipeline(self.cfg, mesh=self.mesh, rules=self.rules,
                              batch_size=self.config.batch,

@@ -74,7 +74,8 @@ def rules_for(cfg: ModelConfig) -> ShardingRules:
 
 def jigsaw_for(cfg: ModelConfig) -> JigsawConfig:
     return JigsawConfig(rules=rules_for(cfg), scheme=cfg.scheme,
-                        impl=cfg.impl, fsdp=cfg.shard_params_over_data)
+                        impl=cfg.impl, fsdp=cfg.shard_params_over_data,
+                        kernel=cfg.kernel)
 
 
 def _sds(shape, dtype, mesh: Mesh, spec: P):
@@ -100,7 +101,7 @@ def opt_structs(params_structs, pspecs, cfg: ModelConfig, mesh: Mesh,
     shapes = jax.eval_shape(partial(adam.init, cfg=adam_cfg),
                             params_structs)
     ospecs = S.opt_specs(shapes["mu"], pspecs,
-                         zero1_axis="data" if zero1 else None)
+                         zero1_axis="data" if zero1 else None, mesh=mesh)
     ospecs = S.sanitize_tree(shapes, ospecs, mesh)
     return jax.tree.map(
         lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,

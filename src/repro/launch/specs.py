@@ -107,30 +107,54 @@ def param_specs(params, cfg: ModelConfig, rules: ShardingRules,
     return walk(params)
 
 
-def opt_specs(opt_state, pspecs, zero1_axis: Optional[str] = None):
+def opt_specs(moments, pspecs, zero1_axis: Optional[str] = None,
+              mesh: Optional[Mesh] = None):
     """Optimizer moments inherit parameter specs; step is replicated.
+
+    ``moments`` is the parameter-shaped tree the moment specs are derived
+    for (arrays or ShapeDtypeStructs -- only ``.shape`` is read, and only
+    when ``mesh`` is given; ``None`` keeps the shape-agnostic choice).
 
     ``zero1_axis`` (beyond-paper, DESIGN.md §6.5): additionally shard
     every moment over the data axis on its first unsharded dim --
     ZeRO-1.  The Adam update then computes per-data-rank shards and
     GSPMD allgathers the fresh params (the classic ZeRO-1 schedule),
-    cutting optimizer HBM by the data-axis extent.
+    cutting optimizer HBM by the data-axis extent.  With ``mesh`` the
+    choice is shape-aware: dims the axis extent does not divide are
+    skipped (a stacked [n_layers, m, d] leaf shards its m dim, not the
+    tiny layer dim that sanitize_tree would only drop again).
     """
-    def z1(spec: P) -> P:
+    extent = mesh.shape[zero1_axis] if (mesh is not None and zero1_axis) \
+        else None
+
+    def z1(spec: P, shape=None) -> P:
         if zero1_axis is None:
             return spec
         dims = list(spec)
+        if shape is not None:
+            dims += [None] * (len(shape) - len(dims))
+        used = set()
+        for e in dims:
+            if e is not None:
+                used |= set(e) if isinstance(e, tuple) else {e}
+        if zero1_axis in used:
+            return P(*dims)
         for i, entry in enumerate(dims):
-            used = set()
-            for e in dims:
-                if e is not None:
-                    used |= set(e) if isinstance(e, tuple) else {e}
-            if entry is None and zero1_axis not in used:
-                dims[i] = zero1_axis
-                break
+            if entry is not None:
+                continue
+            if shape is not None and extent is not None \
+                    and shape[i] % extent != 0:
+                continue
+            dims[i] = zero1_axis
+            break
         return P(*dims)
 
-    mspecs = jax.tree.map(z1, pspecs, is_leaf=lambda x: isinstance(x, P))
+    if moments is None:
+        mspecs = jax.tree.map(z1, pspecs,
+                              is_leaf=lambda x: isinstance(x, P))
+    else:
+        mspecs = jax.tree.map(lambda leaf, sp: z1(sp, leaf.shape),
+                              moments, pspecs)
     return {"step": P(), "mu": mspecs, "nu": mspecs}
 
 

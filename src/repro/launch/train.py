@@ -27,11 +27,12 @@ from repro.launch.engine import EngineConfig, TrainEngine
 
 def train(arch: str, *, steps: int = 100, batch: int = 8, seq_len: int = 128,
           reduced: bool = True, mesh_model: int = 1, mesh_data: int = 1,
-          scheme: str = None, impl: str = None, rollout: int = 1,
+          scheme: str = None, impl: str = None, kernel: str = None,
+          rollout: int = 1,
           lr: float = 1e-3, log_every: int = 10, ckpt: str = None,
           seed: int = 0, metrics_out: str = None, init_params=None,
           pipeline: str = "sharded", prefetch: int = 2, accum: int = 1,
-          eval_every: int = 0, config_override=None):
+          zero1: bool = False, eval_every: int = 0, config_override=None):
     """Back-compat functional entry point; returns (history, params).
 
     New callers should construct a :class:`TrainEngine` directly --
@@ -40,13 +41,13 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq_len: int = 128,
     and examples that sweep custom model sizes)."""
     engine = TrainEngine(
         arch, reduced=reduced, mesh_model=mesh_model, mesh_data=mesh_data,
-        scheme=scheme, impl=impl, init_params=init_params,
+        scheme=scheme, impl=impl, kernel=kernel, init_params=init_params,
         config_override=config_override,
         config=EngineConfig(
             steps=steps, batch=batch, seq_len=seq_len, rollout=rollout,
             lr=lr, log_every=log_every, ckpt=ckpt, seed=seed,
             metrics_out=metrics_out, pipeline=pipeline, prefetch=prefetch,
-            accum=accum, eval_every=eval_every))
+            accum=accum, zero1=zero1, eval_every=eval_every))
     history = engine.run()
     return history, engine.params
 
@@ -63,7 +64,11 @@ def main():
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--scheme", default=None, choices=["1d", "2d", "none"])
     ap.add_argument("--impl", default=None,
-                    choices=["ring", "rs", "gspmd", "allreduce"])
+                    choices=["ring", "ring_chunked", "rs", "gspmd",
+                             "allreduce"])
+    ap.add_argument("--kernel", default=None, choices=["xla", "pallas"],
+                    help="local GEMM engine (pallas = MXU-tiled fused "
+                         "kernels; interpret mode on CPU)")
     ap.add_argument("--rollout", type=int, default=1)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt", default=None)
@@ -78,15 +83,18 @@ def main():
                          "thread (0 = synchronous)")
     ap.add_argument("--accum", type=int, default=1,
                     help="microbatch gradient-accumulation factor")
+    ap.add_argument("--zero1", action="store_true",
+                    help="ZeRO-1: shard optimizer moments over data")
     ap.add_argument("--eval-every", type=int, default=0)
     args = ap.parse_args()
     train(args.arch, steps=args.steps, batch=args.batch,
           seq_len=args.seq_len, reduced=not args.full,
           mesh_model=args.mesh_model, mesh_data=args.mesh_data,
-          scheme=args.scheme, impl=args.impl, rollout=args.rollout,
+          scheme=args.scheme, impl=args.impl, kernel=args.kernel,
+          rollout=args.rollout,
           lr=args.lr, ckpt=args.ckpt, seed=args.seed,
           metrics_out=args.metrics_out, pipeline=args.pipeline,
-          prefetch=args.prefetch, accum=args.accum,
+          prefetch=args.prefetch, accum=args.accum, zero1=args.zero1,
           eval_every=args.eval_every)
 
 

@@ -32,7 +32,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import jigsaw
-from repro.core.api import DEFAULT_JIGSAW, JigsawConfig, linear_apply, linear_init
+from repro.core.api import (DEFAULT_JIGSAW, JigsawConfig, linear_apply,
+                            linear_init, mlp_apply)
 from repro.core.sharding import constrain
 from repro.models import layers as L
 from jax.sharding import PartitionSpec as P
@@ -104,9 +105,9 @@ def _token_mix(bp, x, cfg: ModelConfig, jcfg: JigsawConfig):
     xt = jnp.swapaxes(x, -1, -2)                 # [B, C, T]
     if jcfg.scheme == "1d":
         xt = constrain(xt, P(jcfg.rules.batch_axes, None, jcfg.rules.tp_axis))
-    h = linear_apply(bp["tok_fc1"], xt, jcfg)    # [B, C, d_tok]
-    h = jax.nn.gelu(h)
-    h = linear_apply(bp["tok_fc2"], h, jcfg)     # [B, C, T]
+    # mlp_apply routes through Jigsaw per scheme; under scheme="none" +
+    # kernel="pallas" it is the fused two-GEMM ops.mixer_mlp.
+    h = mlp_apply({"fc1": bp["tok_fc1"], "fc2": bp["tok_fc2"]}, xt, jcfg)
     return jnp.swapaxes(h, -1, -2)
 
 
@@ -117,15 +118,15 @@ def _block_apply(bp, x, cfg: ModelConfig, jcfg: JigsawConfig):
     if jcfg.scheme == "2d":
         m = jigsaw.jigsaw_linear_2d(h, bp["ch_fc1"]["w"], bp["ch_fc1"]["b"],
                                     rules=jcfg.rules,
-                                    accum_dtype=jcfg.accum_dtype)
+                                    accum_dtype=jcfg.accum_dtype,
+                                    kernel=jcfg.kernel)
         m = jax.nn.gelu(m)
         m = jigsaw.jigsaw_linear_2d(m, bp["ch_fc2"]["w"], bp["ch_fc2"]["b"],
                                     rules=jcfg.rules,
-                                    accum_dtype=jcfg.accum_dtype)
+                                    accum_dtype=jcfg.accum_dtype,
+                                    kernel=jcfg.kernel)
     else:
-        m = linear_apply(bp["ch_fc1"], h, jcfg)
-        m = jax.nn.gelu(m)
-        m = linear_apply(bp["ch_fc2"], m, jcfg)
+        m = mlp_apply({"fc1": bp["ch_fc1"], "fc2": bp["ch_fc2"]}, h, jcfg)
     x = x + m
     if jcfg.scheme != "none":
         x = constrain(x, jcfg.rules.act(x.ndim, domain_dim=-2))
@@ -171,7 +172,8 @@ def apply(params, batch, cfg: ModelConfig,
         h = jigsaw.jigsaw_linear_2d(x, params["encoder"]["w"],
                                     params["encoder"]["b"],
                                     rules=jcfg.rules,
-                                    accum_dtype=jcfg.accum_dtype)
+                                    accum_dtype=jcfg.accum_dtype,
+                                    kernel=jcfg.kernel)
     else:
         h = linear_apply(params["encoder"], x, jcfg)       # [B, T, d]
     h = processor(params, h, cfg, jcfg, rollout=rollout)
@@ -179,7 +181,8 @@ def apply(params, batch, cfg: ModelConfig,
         y = jigsaw.jigsaw_linear_2d(h, params["decoder"]["w"],
                                     params["decoder"]["b"],
                                     rules=jcfg.rules,
-                                    accum_dtype=jcfg.accum_dtype)
+                                    accum_dtype=jcfg.accum_dtype,
+                                    kernel=jcfg.kernel)
     else:
         y = linear_apply(params["decoder"], h, jcfg)       # [B, T, p*p*C]
     y = unpatchify(y, cfg.wm_lat, cfg.wm_lon, p, cfg.wm_channels)

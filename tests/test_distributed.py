@@ -13,12 +13,16 @@ SCENARIOS = [
     "jigsaw_1d",
     "jigsaw_1d_fsdp",
     "jigsaw_2d",
+    # ring_chunked_parity runs via tests/test_kernel_parity.py (the
+    # kernels CI job needs it there; listing it here too would double
+    # its interpret-mode cost in tier-1)
     "ring_collectives",
     "weathermixer_schemes",
     "transformer_1d",
     "train_step_mesh",
     "input_pipeline",
     "engine_pipeline",
+    "zero1_engine",
 ]
 
 

@@ -1,0 +1,177 @@
+"""Interpret-mode parity suite for the fused-kernel hot path (ISSUE 2).
+
+Single-process half: the Pallas compute engine (``kernel="pallas"``) must
+match the XLA path within accumulation tolerance for forward AND
+gradients (the custom VJP's backward GEMMs run the same Pallas kernel),
+and ``ops.mixer_mlp`` must match the unfused two-matmul reference.
+
+Distributed half (pseudo-mesh of 16 host-emulated devices, subprocess):
+``ring_chunked`` == ``ring`` bit-for-bit and == ``rs`` within f32
+reduction-order tolerance, with AD through the chunked ring -- see
+tests/dist_scenarios.py::scenario_ring_chunked_parity.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import (JigsawConfig, linear_apply, linear_init,
+                            mlp_apply, mlp_init)
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+XLA = JigsawConfig(scheme="none", kernel="xla")
+PALLAS = JigsawConfig(scheme="none", kernel="pallas")
+
+
+def _tree_close(a, b, rtol, atol):
+    flat_a, flat_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol,
+                           atol=atol) for x, y in zip(flat_a, flat_b))
+
+
+# ---------------------------------------------------------------------------
+# block shrink (satellite: the dead ``bm`` fix)
+# ---------------------------------------------------------------------------
+
+def test_block_dims_shrink_small_gemm():
+    """A 16-row GEMM must run a 16-row block, not pad to block_m=256."""
+    bm, bn, bk = ops.block_dims(16, 300, 40, block_m=256, block_n=256,
+                                block_k=512)
+    assert bm == 16          # sublane-aligned ceiling of m, not block_m
+    assert bn == 256         # round_up(300, 128)=384 > block_n: keep 256
+    assert bk == 128         # lane ceiling of k=40
+
+
+def test_block_dims_alignment_floors():
+    bm, bn, bk = ops.block_dims(3, 5, 7, block_m=256, block_n=256,
+                                block_k=512)
+    assert (bm, bn, bk) == (8, 128, 128)
+    bm16, _, _ = ops.block_dims(3, 5, 7, block_m=256, block_n=256,
+                                block_k=512, dtype=jnp.bfloat16)
+    assert bm16 == 16        # bf16 sublane floor
+
+
+def test_matmul_small_rows_correct():
+    """Post-fix regression: tiny-m GEMMs still numerically correct."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = jax.random.normal(k1, (16, 40))
+    w = jax.random.normal(k2, (300, 40)) * 0.05
+    b = jax.random.normal(k3, (300,)) * 0.1
+    y = ops.matmul(x, w, b, epilogue="gelu")
+    r = ref.block_matmul_ref(x, w, b, "gelu")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP: pallas grads == XLA grads
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("epilogue", ["none", "gelu", "silu"])
+@pytest.mark.parametrize("bias", [True, False])
+def test_matmul_grads_match_ref(epilogue, bias):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = jax.random.normal(k1, (24, 72))
+    w = jax.random.normal(k2, (56, 72)) * 0.05
+    b = jax.random.normal(k3, (56,)) * 0.1 if bias else None
+
+    def f_pallas(*args):
+        xx, ww, bb = (args if bias else (*args, None))
+        return jnp.sum(ops.matmul(xx, ww, bb, epilogue=epilogue) ** 2)
+
+    def f_ref(*args):
+        xx, ww, bb = (args if bias else (*args, None))
+        return jnp.sum(ref.block_matmul_ref(xx, ww, bb, epilogue) ** 2)
+
+    args = (x, w, b) if bias else (x, w)
+    nums = tuple(range(len(args)))
+    gp = jax.grad(f_pallas, argnums=nums)(*args)
+    gr = jax.grad(f_ref, argnums=nums)(*args)
+    for a, c in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_linear_apply_pallas_vs_xla_fwd_and_grad():
+    params = linear_init(KEY, 72, 56)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 72))
+
+    def loss(p, cfg):
+        return jnp.sum(linear_apply(p, x, cfg) ** 2)
+
+    vx, gx = jax.value_and_grad(loss)(params, XLA)
+    vp, gp = jax.value_and_grad(loss)(params, PALLAS)
+    np.testing.assert_allclose(float(vp), float(vx), rtol=1e-4)
+    assert _tree_close(gp, gx, rtol=2e-3, atol=1e-3)
+
+
+def test_linear_apply_pallas_fused_epilogue():
+    """The epilogue knob fuses act(x@w.T+b) on the pallas path."""
+    params = linear_init(KEY, 64, 48)
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, 64))
+    y = linear_apply(params, x, PALLAS, epilogue="gelu")
+    r = jax.nn.gelu(linear_apply(params, x, XLA))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused mixer MLP vs the unfused two-matmul reference
+# ---------------------------------------------------------------------------
+
+def test_mixer_mlp_fwd_and_grad_vs_unfused():
+    params = mlp_init(KEY, 64, 128, 64)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 24, 64))
+
+    def loss(p, cfg):
+        return jnp.sum(mlp_apply(p, x, cfg) ** 2)
+
+    vx, gx = jax.value_and_grad(loss)(params, XLA)
+    vp, gp = jax.value_and_grad(loss)(params, PALLAS)
+    np.testing.assert_allclose(float(vp), float(vx), rtol=1e-4)
+    assert _tree_close(gp, gx, rtol=2e-3, atol=1e-3)
+
+
+def test_mixer_mlp_no_bias():
+    params = mlp_init(KEY, 64, 96, 32, bias=False)
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, 64))
+    y = mlp_apply(params, x, PALLAS)
+    r = mlp_apply(params, x, XLA)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_weathermixer_pallas_forward_matches_xla():
+    """Full reduced WeatherMixer forward: fused kernels == XLA engine."""
+    from repro.configs.registry import get_config
+    from repro.models import registry as M
+
+    cfg = get_config("weathermixer-1b").reduced()
+    params = M.init(KEY, cfg)
+    batch = {"fields": jax.random.normal(
+        KEY, (2, cfg.wm_lat, cfg.wm_lon, cfg.wm_channels))}
+    yx, _ = M.apply(params, batch, cfg, XLA)
+    yp, _ = M.apply(params, batch, cfg, PALLAS)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yx), rtol=2e-4,
+                               atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# distributed half: chunked-ring parity on a 16-device pseudo-mesh
+# ---------------------------------------------------------------------------
+
+def test_ring_chunked_parity_pseudo_mesh():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env.pop("JAX_PLATFORMS", None)
+    script = os.path.join(os.path.dirname(__file__), "dist_scenarios.py")
+    res = subprocess.run(
+        [sys.executable, script, "ring_chunked_parity"], env=env,
+        capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0 and "ALL-OK" in res.stdout, (
+        f"\nstdout:\n{res.stdout[-3000:]}\nstderr:\n{res.stderr[-3000:]}")

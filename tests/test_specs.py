@@ -38,6 +38,22 @@ def test_zero1_adds_data_axis():
     assert o2["mu"]["w"] == P("data", "model")
 
 
+def test_zero1_shape_aware_skips_non_dividing_dims():
+    """With moments + mesh, z1 skips dims the data extent can't divide:
+    a stacked [n_layers, m, d] leaf shards its m dim, not the tiny layer
+    dim (which sanitize_tree would only drop again)."""
+    import jax.numpy as jnp
+    moments = {"w": jnp.zeros((2, 128, 64)), "b": jnp.zeros((2, 64))}
+    pspecs = {"w": P(None, None, "model"), "b": P(None, "model")}
+    ospecs = S.opt_specs(moments, pspecs, zero1_axis="data", mesh=MESH)
+    assert ospecs["mu"]["w"] == P(None, "data", "model")   # 2 % 16 != 0
+    assert ospecs["mu"]["b"] == P(None, "model")           # nothing divides
+    # short specs are padded to the leaf rank before the scan
+    moments2 = {"w": jnp.zeros((2, 32))}
+    o2 = S.opt_specs(moments2, {"w": P()}, zero1_axis="data", mesh=MESH)
+    assert o2["mu"]["w"] == P(None, "data")
+
+
 def test_lm_head_and_table_shard_vocab_dim():
     import jax.numpy as jnp
     params = {"lm_head": {"w": jnp.zeros((1024, 64))},
