@@ -1,0 +1,113 @@
+"""Checkpoint I/O benchmark (ISSUE 4): sync vs async sharded saves.
+
+Measures, on a host-emulated (model=4, data=2) mesh running reduced-WM
+training through ``TrainEngine``:
+
+  * ``sync``   -- blocking sharded save on the train loop (snapshot +
+                  write serialized with compute);
+  * ``async``  -- the background writer: snapshot on the loop thread,
+                  file writes overlapped with the next train steps;
+  * per-rank bytes written (the zero-redundancy accounting: ~=
+                  total_bytes / n_ranks, never a full-model gather).
+
+Absolute numbers on CPU are artifacts; the contribution is the ratio
+(steps+save)_async / (steps+save)_sync < 1 and the byte accounting.
+Writes results/ckpt_io.csv unless --tiny (CI smoke).
+"""
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):   # `python benchmarks/ckpt_io.py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit, run_subprocess_devices
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "ckpt_io.csv")
+
+MEASURE_CODE = """
+import os, shutil, tempfile, time
+import jax
+from repro.configs.registry import get_config
+from repro.launch.engine import EngineConfig, TrainEngine
+
+cfg = get_config("weathermixer-1b").reduced().replace(
+    scheme="1d", wm_lat={lat}, wm_lon={lon}, d_model={dm},
+    wm_d_tok={dtok}, wm_d_ch={dch})
+eng = TrainEngine("weathermixer-1b", reduced=False, config_override=cfg,
+                  mesh_model=4, mesh_data=2, scheme="1d",
+                  config=EngineConfig(steps=64, batch=4, zero1=True))
+root = tempfile.mkdtemp()
+steps_per_save = {steps_per_save}
+reps = {reps}
+
+def run(block, tag):
+    # warmup: one compile + one save
+    it = eng.pipeline.iterate([1] * (reps * steps_per_save + 1),
+                              start_step=0)
+    eng.dispatch(next(it), 1)
+    eng.save(os.path.join(root, "warm"), block=True)
+    jax.block_until_ready(jax.tree.leaves(eng.params)[0])
+    t0 = time.time()
+    for r in range(reps):
+        eng.save(os.path.join(root, f"{{tag}}-{{r}}"), block=block)
+        for _ in range(steps_per_save):
+            eng.dispatch(next(it), 1)
+        eng.wait_checkpoints()
+    jax.block_until_ready(jax.tree.leaves(eng.params)[0])
+    return (time.time() - t0) / reps
+
+sync = run(True, "s")
+async_ = run(False, "a")
+per = eng.last_save.bytes_per_rank
+print("SYNC", sync)
+print("ASYNC", async_)
+print("MAXRANKBYTES", max(per.values()))
+print("TOTALBYTES", eng.last_save.total_bytes)
+print("NRANKS", eng.mesh.devices.size)
+"""
+
+
+def run(tiny: bool = False):
+    lat, lon, dm, dtok, dch = ((32, 64, 64, 64, 64) if tiny
+                               else (96, 192, 256, 512, 512))
+    out = run_subprocess_devices(
+        MEASURE_CODE.format(lat=lat, lon=lon, dm=dm, dtok=dtok, dch=dch,
+                            steps_per_save=2 if tiny else 4,
+                            reps=2 if tiny else 5),
+        n_devices=8)
+    vals = {l.split()[0]: float(l.split()[1])
+            for l in out.splitlines() if l and l.split()[0].isupper()}
+    sync, async_ = vals["SYNC"], vals["ASYNC"]
+    total, maxr = int(vals["TOTALBYTES"]), int(vals["MAXRANKBYTES"])
+    n = int(vals["NRANKS"])
+    return [
+        ("ckpt/sync_save+steps", int(sync * 1e6), "blocking write"),
+        ("ckpt/async_save+steps", int(async_ * 1e6),
+         f"overlap_speedup={sync / async_:.2f}x"),
+        ("ckpt/bytes_per_rank", maxr,
+         f"total={total}|ranks={n}|ideal={total // n}"
+         f"|ratio={maxr * n / total:.2f}"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small grid, no results/ write")
+    ap.add_argument("--no-write", action="store_true")
+    ap.add_argument("--out", default=RESULTS)
+    args = ap.parse_args()
+    rows = run(tiny=args.tiny)
+    emit(rows)
+    if not args.tiny and not args.no_write:
+        with open(args.out, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            for r in rows:
+                f.write(",".join(str(x) for x in r) + "\n")
+        print(f"[ckpt_io] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Zero-redundancy sharded checkpointing (DESIGN.md §9).
+
+* ``manifest``  -- the save/restore metadata contract (global shapes,
+                   dtypes, specs, shard index bounds).
+* ``sharded``   -- per-rank addressable-shard save, topology-free
+                   resharded restore.
+* ``writer``    -- async background writer (snapshot on the caller's
+                   thread, stream files off the critical path).
+* ``io``        -- the legacy (path, params, opt_state, step) facade.
+"""
+from repro.checkpoint.io import restore, save  # noqa: F401
+from repro.checkpoint.manifest import Manifest, load_manifest  # noqa: F401
+from repro.checkpoint.sharded import (restore_checkpoint,  # noqa: F401
+                                      restore_tree, save_checkpoint,
+                                      snapshot, write_snapshot)
+from repro.checkpoint.writer import AsyncCheckpointWriter  # noqa: F401

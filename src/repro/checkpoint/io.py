@@ -1,82 +1,50 @@
-"""Checkpointing: pytree <-> npz with path-flattened keys.
+"""Legacy checkpoint facade over the sharded subsystem.
 
-Layout mirrors the zero-redundancy philosophy: ``save`` can write one
-file per top-level group (params/opt/meta) so shards stream
-independently; on a real pod each host would write its own slice -- here
-(single host) we serialize the addressable arrays.
+``save``/``restore`` keep the original (path, params, opt_state, step)
+signature the engine and older tests were written against, but the
+storage underneath is the zero-redundancy sharded format of
+``repro.checkpoint.sharded``: per-rank shard files + ``manifest.json``
+-- no full-model ``device_get`` ever happens (the old implementation
+gathered the whole pytree onto one host and blocked on a compressed
+npz write; see DESIGN.md §9 for why that is exactly the anti-pattern
+the paper's I/O analysis warns about).
+
+``restore`` validates EVERY leaf of ``like_params`` / ``like_opt``
+against the manifest -- shape and dtype -- and raises naming the
+offending key path (mismatches used to be silently ignored).
 """
 from __future__ import annotations
 
-import json
-import os
 from typing import Any, Dict, Tuple
 
-import jax
-import numpy as np
-
-SEP = "/"
-
-
-def _flatten(tree, prefix=""):
-    out = {}
-    if isinstance(tree, dict):
-        for k, v in tree.items():
-            out.update(_flatten(v, f"{prefix}{k}{SEP}"))
-        return out
-    out[prefix.rstrip(SEP)] = np.asarray(tree)
-    return out
-
-
-def _unflatten(flat: Dict[str, np.ndarray]):
-    tree: Dict[str, Any] = {}
-    for key, val in flat.items():
-        parts = key.split(SEP)
-        node = tree
-        for p in parts[:-1]:
-            node = node.setdefault(p, {})
-        node[parts[-1]] = val
-    return tree
+from repro.checkpoint import sharded
+from repro.checkpoint.manifest import SEP, load_manifest  # noqa: F401
 
 
 def save(path: str, params, opt_state=None, step: int = 0,
          extra: dict = None) -> None:
-    os.makedirs(path, exist_ok=True)
-    np.savez_compressed(os.path.join(path, "params.npz"),
-                        **_flatten(jax.device_get(params)))
+    """Sharded, synchronous save (the engine uses the async writer; this
+    facade is the simple blocking entry point)."""
+    groups: Dict[str, Any] = {"params": params}
     if opt_state is not None:
-        np.savez_compressed(os.path.join(path, "opt_state.npz"),
-                            **_flatten(jax.device_get(opt_state)))
-    meta = {"step": int(step), **(extra or {})}
-    with open(os.path.join(path, "meta.json"), "w") as f:
-        json.dump(meta, f)
+        groups["opt_state"] = opt_state
+    sharded.save_checkpoint(path, groups, step=step, extra=extra)
 
 
-def restore(path: str, like_params=None, like_opt=None
-            ) -> Tuple[Any, Any, int]:
-    """Returns (params, opt_state, step).  If ``like_*`` pytrees are given,
-    shapes/dtypes are validated against them."""
-    flat = dict(np.load(os.path.join(path, "params.npz")))
-    params = _unflatten(flat)
+def restore(path: str, like_params=None, like_opt=None, mesh=None,
+            specs=None) -> Tuple[Any, Any, int]:
+    """Returns (params, opt_state, step).
+
+    ``like_*`` pytrees are validated leaf-by-leaf (shape AND dtype;
+    errors name the offending key path).  With ``mesh`` the leaves land
+    as jax.Arrays sharded on that mesh (saved specs refit to it, or
+    ``specs`` overrides); without it they are plain numpy arrays."""
+    man = load_manifest(path)
+    params = sharded.restore_tree(path, "params", like=like_params,
+                                  mesh=mesh, specs=specs, manifest=man)
     opt_state = None
-    opt_path = os.path.join(path, "opt_state.npz")
-    if os.path.exists(opt_path):
-        opt_state = _unflatten(dict(np.load(opt_path)))
-    with open(os.path.join(path, "meta.json")) as f:
-        step = json.load(f)["step"]
-
-    def check(like, got, name):
-        flat_like = _flatten(jax.device_get(like))
-        flat_got = _flatten(got)
-        if set(flat_like) != set(flat_got):
-            missing = set(flat_like) ^ set(flat_got)
-            raise ValueError(f"{name}: key mismatch {sorted(missing)[:5]}")
-        for k, v in flat_like.items():
-            if v.shape != flat_got[k].shape:
-                raise ValueError(
-                    f"{name}[{k}]: shape {flat_got[k].shape} != {v.shape}")
-
-    if like_params is not None:
-        check(like_params, params, "params")
-    if like_opt is not None and opt_state is not None:
-        check(like_opt, opt_state, "opt_state")
-    return params, opt_state, step
+    if "opt_state" in man.groups:
+        opt_state = sharded.restore_tree(path, "opt_state", like=like_opt,
+                                         mesh=mesh, specs=specs,
+                                         manifest=man)
+    return params, opt_state, man.step

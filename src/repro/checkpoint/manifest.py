@@ -1,0 +1,219 @@
+"""Checkpoint manifest: the metadata contract between save and restore.
+
+A checkpoint directory holds one ``manifest.json`` plus one shard file
+per writing rank (``shard-dNNNNN.npz``).  The manifest records, for
+every leaf of every group (``params`` / ``opt_state`` / ...):
+
+  * the GLOBAL shape and dtype,
+  * the PartitionSpec it was saved under (``null`` entries for
+    replicated dims), and
+  * the list of shards -- ``(file, npz key, per-dim [start, stop)
+    bounds, writing device id)`` -- that tile the global array exactly
+    once.
+
+Because the manifest describes global arrays in terms of index bounds
+(not devices), restore is topology-free: any mesh whose sharding asks
+for a slice of the global array can be served by reading the shard
+files that overlap it (``repro.checkpoint.sharded``).  That is the
+save-topology != restore-topology contract of DESIGN.md §9.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+FORMAT = "jigsaw-ckpt-v1"
+MANIFEST_NAME = "manifest.json"
+SEP = "/"
+
+Bounds = Tuple[Tuple[int, int], ...]
+
+
+# ---------------------------------------------------------------------------
+# Pytree <-> flat path maps (dict-of-dict trees, the only kind we use)
+# ---------------------------------------------------------------------------
+
+def flatten_tree(tree, prefix: str = "") -> Dict[str, Any]:
+    """``{"a": {"b": leaf}} -> {"a/b": leaf}`` (leaves untouched)."""
+    out: Dict[str, Any] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten_tree(v, f"{prefix}{k}{SEP}"))
+        return out
+    out[prefix.rstrip(SEP)] = tree
+    return out
+
+
+def unflatten_tree(flat: Dict[str, Any]):
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpec serialization
+# ---------------------------------------------------------------------------
+
+def spec_to_json(spec) -> List:
+    """PartitionSpec -> JSON list: None | "axis" | ["ax1", "ax2"]."""
+    out: List = []
+    for e in spec:
+        if e is None:
+            out.append(None)
+        elif isinstance(e, (tuple, list)):
+            out.append([str(a) for a in e])
+        else:
+            out.append(str(e))
+    return out
+
+
+def spec_from_json(entries: Sequence):
+    from jax.sharding import PartitionSpec as P
+    return P(*[tuple(e) if isinstance(e, list) else e for e in entries])
+
+
+def normalize_index(idx, shape: Tuple[int, ...]) -> Bounds:
+    """Concrete per-dim (start, stop) bounds from a tuple of slices."""
+    out = []
+    for s, dim in zip(idx, shape):
+        start = 0 if s.start is None else int(s.start)
+        stop = dim if s.stop is None else int(s.stop)
+        out.append((start, stop))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Manifest records
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardEntry:
+    """One saved shard of one leaf."""
+    file: str            # npz file (relative to the checkpoint dir)
+    key: str             # member key inside the npz
+    bounds: Bounds       # per-dim [start, stop) in the global array
+    device: int          # writing device id (byte accounting / debug)
+
+    def to_json(self):
+        return {"file": self.file, "key": self.key,
+                "bounds": [list(b) for b in self.bounds],
+                "device": self.device}
+
+    @staticmethod
+    def from_json(d) -> "ShardEntry":
+        return ShardEntry(d["file"], d["key"],
+                          tuple((int(a), int(b)) for a, b in d["bounds"]),
+                          int(d["device"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafEntry:
+    """Global description of one pytree leaf."""
+    shape: Tuple[int, ...]
+    dtype: str
+    spec: List                       # spec_to_json form
+    shards: Tuple[ShardEntry, ...]
+
+    def to_json(self):
+        return {"shape": list(self.shape), "dtype": self.dtype,
+                "spec": self.spec,
+                "shards": [s.to_json() for s in self.shards]}
+
+    @staticmethod
+    def from_json(d) -> "LeafEntry":
+        return LeafEntry(tuple(d["shape"]), d["dtype"], d["spec"],
+                         tuple(ShardEntry.from_json(s)
+                               for s in d["shards"]))
+
+
+@dataclasses.dataclass
+class Manifest:
+    step: int = 0
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    mesh_axes: Optional[Tuple[str, ...]] = None   # saving topology (info)
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    groups: Dict[str, Dict[str, LeafEntry]] = dataclasses.field(
+        default_factory=dict)
+
+    def to_json(self):
+        return {
+            "format": FORMAT,
+            "step": int(self.step),
+            "extra": self.extra,
+            "mesh": (None if self.mesh_axes is None else
+                     {"axes": list(self.mesh_axes),
+                      "shape": list(self.mesh_shape)}),
+            "groups": {g: {k: e.to_json() for k, e in leaves.items()}
+                       for g, leaves in self.groups.items()},
+        }
+
+    @staticmethod
+    def from_json(d) -> "Manifest":
+        if d.get("format") != FORMAT:
+            raise ValueError(
+                f"not a {FORMAT} checkpoint (format={d.get('format')!r})")
+        mesh = d.get("mesh")
+        return Manifest(
+            step=int(d["step"]), extra=dict(d.get("extra") or {}),
+            mesh_axes=None if mesh is None else tuple(mesh["axes"]),
+            mesh_shape=None if mesh is None else tuple(mesh["shape"]),
+            groups={g: {k: LeafEntry.from_json(e)
+                        for k, e in leaves.items()}
+                    for g, leaves in d["groups"].items()})
+
+    def save(self, path: str) -> None:
+        """Write manifest.json atomically (tmp + rename): shard files are
+        written FIRST, the manifest LAST, so a crashed save is never
+        mistaken for a complete checkpoint."""
+        tmp = os.path.join(path, MANIFEST_NAME + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+        os.replace(tmp, os.path.join(path, MANIFEST_NAME))
+
+
+def load_manifest(path: str) -> Manifest:
+    fname = os.path.join(path, MANIFEST_NAME)
+    if not os.path.exists(fname):
+        raise FileNotFoundError(
+            f"no {MANIFEST_NAME} under {path!r} -- not a sharded "
+            f"checkpoint (or an interrupted save)")
+    with open(fname) as f:
+        return Manifest.from_json(json.load(f))
+
+
+# ---------------------------------------------------------------------------
+# Validation against a ``like`` pytree
+# ---------------------------------------------------------------------------
+
+def validate_like(entries: Dict[str, LeafEntry], like, group: str) -> None:
+    """Every leaf of ``like`` must exist in the manifest with the same
+    shape AND dtype; extra/missing keys are errors too.  Raises with the
+    offending ``group[/key/path]`` (the silent-mismatch fix of ISSUE 4)."""
+    flat_like = flatten_tree(like)
+    if set(flat_like) != set(entries):
+        missing = sorted(set(flat_like) - set(entries))
+        extra = sorted(set(entries) - set(flat_like))
+        raise ValueError(
+            f"{group}: key mismatch (missing in checkpoint: "
+            f"{missing[:5]}, unexpected in checkpoint: {extra[:5]})")
+    for key, leaf in flat_like.items():
+        e = entries[key]
+        shape = tuple(np.shape(leaf))
+        dtype = np.dtype(getattr(leaf, "dtype", np.asarray(leaf).dtype))
+        if shape != e.shape:
+            raise ValueError(
+                f"{group}[{SEP}{key}]: checkpoint shape {e.shape} != "
+                f"expected {shape}")
+        if np.dtype(e.dtype) != dtype:
+            raise ValueError(
+                f"{group}[{SEP}{key}]: checkpoint dtype {e.dtype} != "
+                f"expected {dtype.name}")

@@ -1,0 +1,94 @@
+"""Async checkpoint writer: hide checkpoint I/O behind training compute.
+
+The same two-phase split as the input pipeline's prefetch thread
+(``data/pipeline.py``), mirrored onto the output side:
+
+  1. ``save()`` SYNCHRONOUSLY snapshots the addressable shards to host
+     memory (``sharded.snapshot``) -- this must happen on the caller's
+     thread, before the next train step donates/overwrites the device
+     buffers -- then
+  2. hands the Snapshot to a background thread that streams the shard
+     files and manifest to disk while the train loop keeps stepping.
+
+Guards:
+
+  * at most ONE write is in flight: a second ``save()`` first waits for
+    the previous write (bounding host memory to ~2 snapshots and
+    keeping checkpoint directories internally consistent);
+  * ``wait()`` is the barrier -- it joins the worker and re-raises any
+    write error on the caller's thread (a failed checkpoint must not be
+    silent);
+  * the writer is reusable after ``wait()``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Optional
+
+from jax.sharding import Mesh
+
+from repro.checkpoint import sharded
+
+
+class AsyncCheckpointWriter:
+    """Background writer for sharded checkpoints.
+
+    ``write_fn(snapshot, path)`` defaults to ``sharded.write_snapshot``
+    and is injectable for tests (e.g. a slowed writer to assert the
+    train loop genuinely overlaps the write).
+    """
+
+    def __init__(self, write_fn: Optional[Callable] = None):
+        self._write_fn = write_fn or sharded.write_snapshot
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._lock = threading.Lock()
+        self.saves = 0            # completed + in-flight submissions
+
+    # -- state ----------------------------------------------------------
+    @property
+    def in_flight(self) -> bool:
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    # -- barrier --------------------------------------------------------
+    def wait(self) -> None:
+        """Block until the in-flight write (if any) finishes; re-raise
+        its error here."""
+        t = self._thread
+        if t is not None:
+            t.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- submission -----------------------------------------------------
+    def save(self, path: str, groups: Dict[str, Any], *, step: int = 0,
+             extra: Optional[dict] = None, mesh: Optional[Mesh] = None,
+             block: bool = False) -> sharded.Snapshot:
+        """Snapshot ``groups`` now; write them in the background.
+
+        Returns the Snapshot (its ``bytes_per_rank`` is the per-rank
+        byte accounting asserted by the dist scenarios).  ``block=True``
+        degrades to a synchronous save (the A/B baseline the ckpt_io
+        benchmark measures against)."""
+        with self._lock:
+            self.wait()                       # in-flight guard
+            snap = sharded.snapshot(groups, step=step, extra=extra,
+                                    mesh=mesh)
+            self.saves += 1
+            if block:
+                self._write_fn(snap, path)
+                return snap
+
+            def work():
+                try:
+                    self._write_fn(snap, path)
+                except BaseException as e:    # surfaced at next wait()
+                    self._error = e
+
+            self._thread = threading.Thread(
+                target=work, name=f"ckpt-writer:{path}", daemon=True)
+            self._thread.start()
+            return snap

@@ -15,9 +15,13 @@ Three pieces (DESIGN.md §7):
 * ``BatchSource``       -- dataset adapter exposing full-batch and
                            per-shard reads that are bit-identical to
                            slicing the full batch.
-* ``InputPipeline``     -- derives each device's index slice from the
-                           mesh + batch PartitionSpecs, reads only that
-                           shard, assembles the global jax.Array with
+* ``InputPipeline``     -- derives a per-HOST read plan from the mesh +
+                           batch PartitionSpecs (the UNIQUE index slices
+                           across this host's addressable devices,
+                           computed once since specs are step-invariant),
+                           reads each unique slice exactly once per step,
+                           fans it out to the devices that replicate it,
+                           assembles the global jax.Array with
                            ``make_array_from_single_device_arrays``, and
                            (optionally) prefetches on a worker thread.
                            ``mode="sync-full"`` preserves the legacy
@@ -42,6 +46,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# hashable (start, stop) bounds per dim from a sharding index tuple
+# (``slice`` is unhashable on py<3.12); shared with the checkpoint
+# subsystem, which records the same bounds in its manifest
+from repro.checkpoint.manifest import normalize_index as _normalize_index
 from repro.data.tokens import TokenDataConfig, TokenDataset
 from repro.data.weather import WeatherDataConfig, WeatherDataset
 
@@ -62,6 +70,7 @@ class PipelineStats:
                               and what the ∝ 1/ranks test measures.
     """
     steps: int = 0
+    plan_builds: int = 0
     generated_bytes: Dict[str, int] = dataclasses.field(default_factory=dict)
     rank_bytes: Dict[str, Dict[int, int]] = dataclasses.field(
         default_factory=dict)
@@ -200,19 +209,22 @@ class TokenBatchSource(BatchSource):
 # The pipeline
 # ---------------------------------------------------------------------------
 
-def _normalize_index(idx, shape) -> Tuple[Tuple[int, int], ...]:
-    """Concrete, hashable (start, stop) bounds per dim from a sharding
-    index tuple (``slice`` objects are unhashable on py<3.12)."""
-    out = []
-    for s, dim in zip(idx, shape):
-        start = 0 if s.start is None else int(s.start)
-        stop = dim if s.stop is None else int(s.stop)
-        out.append((start, stop))
-    return tuple(out)
 
 
 def _slices(nidx: Tuple[Tuple[int, int], ...]) -> Tuple[slice, ...]:
     return tuple(slice(a, b) for a, b in nidx)
+
+
+@dataclasses.dataclass(frozen=True)
+class _ReadPlan:
+    """Per-host read plan for one batch key: the UNIQUE index slices any
+    addressable device needs, each with the devices that replicate it.
+    Built once per pipeline (specs and shapes are step-invariant), so
+    multi-replica meshes never read the same slice once per local
+    device -- only once per host."""
+    shape: Tuple[int, ...]
+    sharding: NamedSharding
+    reads: Tuple[Tuple[Tuple[Tuple[int, int], ...], Tuple], ...]
 
 
 class InputPipeline:
@@ -244,6 +256,11 @@ class InputPipeline:
         self.mode = mode
         self.prefetch = int(prefetch)
         self.stats = PipelineStats()
+        # next step this pipeline will serve (checkpointed + restored by
+        # the engine for exact resume; batches are pure functions of the
+        # step so the cursor IS the full pipeline state)
+        self.cursor = 0
+        self._plans: Dict[str, _ReadPlan] = {}
 
     # -- host-side ------------------------------------------------------
     def host_batch(self, step: int, horizon: int = 1
@@ -273,37 +290,67 @@ class InputPipeline:
         return {k: self._assemble(k, step, horizon)
                 for k in self.source.keys}
 
+    def _plan_for(self, key: str) -> _ReadPlan:
+        """The (cached) per-host read plan for ``key``: unique slices
+        across this host's addressable devices, grouped."""
+        plan = self._plans.get(key)
+        if plan is None:
+            shape = self.source.key_shape(key)
+            sharding = self._sharding_for(key, shape)
+            idx_map = sharding.addressable_devices_indices_map(shape)
+            groups: Dict[Tuple[Tuple[int, int], ...], list] = {}
+            for dev, idx in idx_map.items():
+                groups.setdefault(_normalize_index(idx, shape),
+                                  []).append(dev)
+            plan = _ReadPlan(shape, sharding,
+                             tuple((nidx, tuple(devs))
+                                   for nidx, devs in groups.items()))
+            self._plans[key] = plan
+            self.stats.plan_builds += 1
+        return plan
+
     def _assemble(self, key: str, step: int, horizon: int) -> jax.Array:
-        """Build the global array from per-device partitioned reads."""
-        shape = self.source.key_shape(key)
-        sharding = self._sharding_for(key, shape)
-        idx_map = sharding.addressable_devices_indices_map(shape)
-        bufs: Dict[Tuple[slice, ...], np.ndarray] = {}
+        """Build the global array from per-host partitioned reads: each
+        unique slice in the plan is generated ONCE and fanned out to
+        every device that replicates it."""
+        plan = self._plan_for(key)
         arrays = []
-        for dev, idx in idx_map.items():
-            nidx = _normalize_index(idx, shape)
-            buf = bufs.get(nidx)
-            generated = buf is None
-            if generated:
-                buf = np.ascontiguousarray(
-                    self.source.read_key(key, step, horizon, nidx))
-                bufs[nidx] = buf
-            self.stats.record(key, dev.id, buf.nbytes, generated)
-            arrays.append(jax.device_put(buf, dev))
+        for nidx, devs in plan.reads:
+            buf = np.ascontiguousarray(
+                self.source.read_key(key, step, horizon, nidx))
+            for j, dev in enumerate(devs):
+                self.stats.record(key, dev.id, buf.nbytes, generated=j == 0)
+                arrays.append(jax.device_put(buf, dev))
         return jax.make_array_from_single_device_arrays(
-            shape, sharding, arrays)
+            plan.shape, plan.sharding, arrays)
+
+    # -- resume state ----------------------------------------------------
+    def state(self) -> Dict[str, int]:
+        """Checkpointable cursor (batches are pure functions of the step,
+        so this one integer restarts the stream exactly)."""
+        return {"cursor": int(self.cursor)}
+
+    def set_state(self, state: Dict[str, int]) -> None:
+        self.cursor = int(state["cursor"])
 
     # -- prefetching iterator -------------------------------------------
-    def iterate(self, horizons: Sequence[int], start_step: int = 0
+    def iterate(self, horizons: Sequence[int],
+                start_step: Optional[int] = None
                 ) -> Iterable[Dict[str, jax.Array]]:
         """Yield device batches for steps ``start_step + i`` with per-step
-        rollout horizons ``horizons[i]``.  With ``prefetch > 0`` a daemon
-        thread generates and transfers batches ahead of the consumer;
-        values are identical either way (pure function of the step)."""
+        rollout horizons ``horizons[i]``.  ``start_step=None`` continues
+        from the pipeline's cursor (0 on a fresh pipeline, the restored
+        step after a resume).  With ``prefetch > 0`` a daemon thread
+        generates and transfers batches ahead of the consumer; values
+        are identical either way (pure function of the step)."""
         n = len(horizons)
+        if start_step is None:
+            start_step = self.cursor
         if self.prefetch <= 0:
             for i in range(n):
-                yield self.get(start_step + i, int(horizons[i]))
+                batch = self.get(start_step + i, int(horizons[i]))
+                self.cursor = start_step + i + 1
+                yield batch
             return
 
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
@@ -323,10 +370,11 @@ class InputPipeline:
                              daemon=True)
         t.start()
         try:
-            for _ in range(n):
+            for i in range(n):
                 batch, err = q.get()
                 if err is not None:
                     raise err
+                self.cursor = start_step + i + 1
                 yield batch
         finally:
             stop.set()

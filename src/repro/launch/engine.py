@@ -10,7 +10,10 @@ Replaces the monolithic ``train()`` loop: the engine owns
   * microbatch gradient accumulation (``accum``),
   * eval cadence (held-out steps on a separate pipeline instance, so the
     prefetch thread and eval reads never share dataset memo state),
-  * metrics history, logging, and checkpoint hooks.
+  * metrics history, logging, and zero-redundancy sharded checkpoints
+    (async background writes, ``EngineConfig(resume=...)`` exact resume
+    restoring params/opt/step/rollout-schedule/pipeline-cursor --
+    DESIGN.md §9).
 
 ``launch/train.py``, the examples, and the measured benchmarks are thin
 callers of this class (DESIGN.md §7).
@@ -35,8 +38,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import checkpoint as ckpt
 from repro import compat
-from repro.checkpoint import io as ckpt_io
 from repro.configs.registry import get_config
 from repro.core.sharding import RULES_1D
 from repro.data.pipeline import InputPipeline, make_pipeline
@@ -65,6 +68,8 @@ class EngineConfig:
     zero1: bool = False        # ZeRO-1: shard optimizer moments over data
     ckpt: Optional[str] = None
     ckpt_every: int = 0        # 0 = only a final checkpoint (if ckpt set)
+    resume: Optional[str] = None   # checkpoint dir: exact-resume from it
+    async_save: bool = True    # background checkpoint writes (DESIGN §9)
     seed: int = 0
     pipeline: str = "sharded"  # "sharded" | "sync-full"
     prefetch: int = 2          # 0 disables the background thread
@@ -157,6 +162,12 @@ class TrainEngine:
         self._eval_fn = None
         self.history: List[Dict] = []
         self.step_idx = 0
+        # async sharded checkpointing (repro.checkpoint, DESIGN.md §9):
+        # snapshot on this thread, stream files from a background one
+        self._writer = ckpt.AsyncCheckpointWriter()
+        self.last_save = None      # Snapshot of the most recent save
+        if config.resume:
+            self._restore(config.resume)
 
     # -- construction helpers -------------------------------------------
     def _zero1_shardings(self):
@@ -196,10 +207,12 @@ class TrainEngine:
         """Train for ``config.steps`` steps; returns the metrics history
         (same record format as the legacy train() loop)."""
         c = self.config
+        start = self.step_idx          # > 0 after a resume
         with self._mesh_ctx():
             t0 = time.time()
-            it = self.pipeline.iterate(self.r_sched)
-            for i, batch in enumerate(it):
+            it = self.pipeline.iterate(self.r_sched[start:],
+                                       start_step=start)
+            for i, batch in zip(range(start, c.steps), it):
                 metrics = self.dispatch(batch, int(self.r_sched[i]))
                 if i % c.log_every == 0 or i == c.steps - 1:
                     m = {k: float(v) for k, v in metrics.items()}
@@ -219,6 +232,7 @@ class TrainEngine:
         if c.ckpt:
             self.save(c.ckpt)
             print(f"checkpoint -> {c.ckpt}")
+        self.wait_checkpoints()        # barrier for in-flight writes
         if c.metrics_out:
             import json
             with open(c.metrics_out, "w") as f:
@@ -245,9 +259,57 @@ class TrainEngine:
         return out
 
     # -- checkpointing ---------------------------------------------------
-    def save(self, path: str) -> None:
-        ckpt_io.save(path, self.params, self.opt_state, self.step_idx,
-                     extra={"arch": self.arch, "reduced": self.reduced})
+    def save(self, path: str, block: Optional[bool] = None) -> None:
+        """Sharded checkpoint of params/opt_state/step + resume state.
+
+        Each rank serializes only its addressable shards (no full-model
+        gather); with ``config.async_save`` the device->host snapshot
+        happens here and the file writes stream from a background thread
+        while training continues (``wait_checkpoints`` is the barrier)."""
+        c = self.config
+        extra = {"arch": self.arch, "reduced": self.reduced,
+                 "seed": c.seed, "steps": c.steps, "rollout": c.rollout,
+                 "scheme": self.cfg.scheme,
+                 "pipeline": self.pipeline.state()}
+        block = (not c.async_save) if block is None else block
+        self.last_save = self._writer.save(
+            path, {"params": self.params, "opt_state": self.opt_state},
+            step=self.step_idx, extra=extra, mesh=self.mesh, block=block)
+
+    def wait_checkpoints(self) -> None:
+        """Barrier for in-flight checkpoint writes (re-raises their
+        errors on this thread)."""
+        self._writer.wait()
+
+    def _restore(self, path: str) -> None:
+        """Exact resume: params, opt state (incl. Adam step), loop step
+        index, rollout schedule (revalidated from config), and the data
+        pipeline cursor -- an interrupted run continues with a
+        bit-identical loss history (``resume_exact`` dist scenario)."""
+        c = self.config
+        man = ckpt.load_manifest(path)
+        for field in ("seed", "rollout", "steps"):
+            want, got = getattr(c, field), man.extra.get(field)
+            if got is not None and got != want:
+                raise ValueError(
+                    f"resume {path!r}: checkpoint {field}={got} != engine "
+                    f"{field}={want} -- the rollout schedule / lr "
+                    f"schedule would diverge; pass the saved value")
+        arch = man.extra.get("arch")
+        if arch is not None and arch != self.arch:
+            raise ValueError(f"resume {path!r}: checkpoint arch {arch!r} "
+                             f"!= engine arch {self.arch!r}")
+        params = ckpt.restore_tree(path, "params", like=self.params,
+                                   mesh=self.mesh)
+        opt = ckpt.restore_tree(path, "opt_state", like=self.opt_state,
+                                mesh=self.mesh)
+        if self.mesh is None:
+            params = jax.tree.map(jnp.asarray, params)
+            opt = jax.tree.map(jnp.asarray, opt)
+        self.params, self.opt_state = params, opt
+        self.step_idx = man.step
+        self.pipeline.set_state(man.extra.get("pipeline",
+                                              {"cursor": man.step}))
 
     # -- benchmarking ----------------------------------------------------
     def benchmark(self, steps: int = 10, warmup: int = 2) -> float:

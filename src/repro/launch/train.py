@@ -5,8 +5,14 @@ configs on the 16x16 mesh) from the same entry point:
 
   PYTHONPATH=src python -m repro.launch.train --arch weathermixer-1b \
       --reduced --steps 200 --batch 8 [--mesh-model 4 --mesh-data 2] \
-      [--scheme 2d] [--rollout 3] [--ckpt out/ckpt] \
-      [--pipeline sharded|sync-full] [--prefetch 2] [--accum 2]
+      [--scheme 2d] [--rollout 3] [--ckpt out/ckpt] [--ckpt-every 50] \
+      [--resume out/ckpt-50] [--pipeline sharded|sync-full] \
+      [--prefetch 2] [--accum 2]
+
+Checkpoints are zero-redundancy sharded (each rank writes only its
+addressable shards, streamed by a background writer; DESIGN.md §9);
+``--resume`` continues an interrupted run with a bit-identical loss
+history.
 
 The input path is the domain-parallel sharded pipeline by default: each
 model-parallel rank generates only its (lon x channel) partition and a
@@ -30,6 +36,7 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq_len: int = 128,
           scheme: str = None, impl: str = None, kernel: str = None,
           rollout: int = 1,
           lr: float = 1e-3, log_every: int = 10, ckpt: str = None,
+          ckpt_every: int = 0, resume: str = None, async_save: bool = True,
           seed: int = 0, metrics_out: str = None, init_params=None,
           pipeline: str = "sharded", prefetch: int = 2, accum: int = 1,
           zero1: bool = False, eval_every: int = 0, config_override=None):
@@ -45,7 +52,8 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq_len: int = 128,
         config_override=config_override,
         config=EngineConfig(
             steps=steps, batch=batch, seq_len=seq_len, rollout=rollout,
-            lr=lr, log_every=log_every, ckpt=ckpt, seed=seed,
+            lr=lr, log_every=log_every, ckpt=ckpt, ckpt_every=ckpt_every,
+            resume=resume, async_save=async_save, seed=seed,
             metrics_out=metrics_out, pipeline=pipeline, prefetch=prefetch,
             accum=accum, zero1=zero1, eval_every=eval_every))
     history = engine.run()
@@ -71,7 +79,17 @@ def main():
                          "kernels; interpret mode on CPU)")
     ap.add_argument("--rollout", type=int, default=1)
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint dir (sharded manifest format); "
+                         "periodic saves land at <ckpt>-<step>")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save every N steps (0 = final only)")
+    ap.add_argument("--resume", default=None,
+                    help="checkpoint dir to exact-resume from (restores "
+                         "params/opt/step/rollout schedule/data cursor)")
+    ap.add_argument("--sync-save", action="store_true",
+                    help="block the loop on checkpoint writes instead of "
+                         "the async background writer")
     ap.add_argument("--metrics-out", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--pipeline", default="sharded",
@@ -92,7 +110,9 @@ def main():
           mesh_model=args.mesh_model, mesh_data=args.mesh_data,
           scheme=args.scheme, impl=args.impl, kernel=args.kernel,
           rollout=args.rollout,
-          lr=args.lr, ckpt=args.ckpt, seed=args.seed,
+          lr=args.lr, ckpt=args.ckpt, ckpt_every=args.ckpt_every,
+          resume=args.resume, async_save=not args.sync_save,
+          seed=args.seed,
           metrics_out=args.metrics_out, pipeline=args.pipeline,
           prefetch=args.prefetch, accum=args.accum, zero1=args.zero1,
           eval_every=args.eval_every)

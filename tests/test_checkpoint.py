@@ -1,0 +1,293 @@
+"""Sharded checkpoint subsystem (DESIGN.md §9): manifest layout,
+save/restore round-trips, leaf validation with key paths, cross-shard
+slice reassembly, the async writer (overlap + in-flight guard + error
+propagation), pipeline cursor state, and single-device exact resume.
+Multi-device save/reshard/resume runs as dist scenarios
+(``ckpt_sharded_reshard`` here via subprocess; ``resume_exact`` via
+test_distributed.py)."""
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import io as ckpt_io
+from repro.checkpoint import manifest as MF
+from repro.checkpoint import sharded
+from repro.checkpoint.writer import AsyncCheckpointWriter
+from repro.optim import adam
+
+HERE = os.path.dirname(__file__)
+
+
+def _params():
+    return {"layer": {"w": jnp.arange(12.0).reshape(3, 4),
+                      "b": jnp.zeros((4,), jnp.float32)},
+            "embed": {"table": jnp.ones((4, 2))},
+            "blend": jnp.arange(3, dtype=jnp.int32)}
+
+
+# -- facade ------------------------------------------------------------
+
+def test_facade_roundtrip_layout_and_meta(tmp_path):
+    params = _params()
+    opt = adam.init(params, adam.AdamConfig())
+    path = str(tmp_path / "ck")
+    ckpt_io.save(path, params, opt, step=42, extra={"arch": "t"})
+    # layout: manifest + one shard file for the single rank
+    assert os.path.exists(os.path.join(path, "manifest.json"))
+    man = ckpt_io.load_manifest(path)
+    assert man.step == 42 and man.extra["arch"] == "t"
+    assert set(man.groups) == {"params", "opt_state"}
+    p2, o2, step = ckpt_io.restore(path, like_params=params, like_opt=opt)
+    assert step == 42 and int(o2["step"]) == 0
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+        assert a.dtype == np.asarray(b).dtype   # int32 leaf survives
+
+
+def test_restore_validates_shape_with_keypath(tmp_path):
+    path = str(tmp_path / "ck")
+    ckpt_io.save(path, _params(), step=1)
+    bad = _params()
+    bad["layer"]["w"] = jnp.zeros((3, 5))
+    with pytest.raises(ValueError, match=r"params\[/layer/w\].*shape"):
+        ckpt_io.restore(path, like_params=bad)
+
+
+def test_restore_validates_dtype_with_keypath(tmp_path):
+    """Regression (ISSUE 4 satellite): dtype mismatches used to pass
+    silently through restore."""
+    path = str(tmp_path / "ck")
+    ckpt_io.save(path, _params(), step=1)
+    bad = _params()
+    bad["blend"] = bad["blend"].astype(jnp.float32)
+    with pytest.raises(ValueError, match=r"params\[/blend\].*dtype"):
+        ckpt_io.restore(path, like_params=bad)
+
+
+def test_restore_key_mismatch_lists_paths(tmp_path):
+    path = str(tmp_path / "ck")
+    ckpt_io.save(path, _params(), step=1)
+    with pytest.raises(ValueError, match="key mismatch"):
+        ckpt_io.restore(path, like_params={"w": jnp.zeros((3, 3))})
+
+
+def test_restore_missing_manifest(tmp_path):
+    with pytest.raises(FileNotFoundError, match="manifest"):
+        ckpt_io.restore(str(tmp_path / "nope"))
+
+
+# -- manifest ----------------------------------------------------------
+
+def test_spec_serde_roundtrip():
+    from jax.sharding import PartitionSpec as P
+    for spec in [P(), P(None, "model"), P(("data", "model"), None),
+                 P("data", None, "model")]:
+        assert MF.spec_from_json(MF.spec_to_json(spec)) == spec
+
+
+def test_manifest_rejects_foreign_format(tmp_path):
+    import json
+    path = str(tmp_path / "ck")
+    os.makedirs(path)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"format": "not-a-ckpt"}, f)
+    with pytest.raises(ValueError, match="format"):
+        ckpt_io.load_manifest(path)
+
+
+# -- cross-shard reassembly (the resharding kernel of restore) ---------
+
+def _two_shard_checkpoint(path):
+    """Hand-built checkpoint: leaf (4, 4) saved as two row shards, the
+    layout an e.g. 2-way mesh would have written."""
+    full = np.arange(16, dtype=np.float32).reshape(4, 4)
+    shards = (MF.ShardEntry("shard-d00000.npz", "params/w#0",
+                            ((0, 2), (0, 4)), 0),
+              MF.ShardEntry("shard-d00001.npz", "params/w#0",
+                            ((2, 4), (0, 4)), 1))
+    entry = MF.LeafEntry((4, 4), "float32", [None, None], shards)
+    man = MF.Manifest(step=0, groups={"params": {"w": entry}})
+    blobs = {"shard-d00000.npz": {"params/w#0": full[:2]},
+             "shard-d00001.npz": {"params/w#0": full[2:]}}
+    sharded.write_snapshot(sharded.Snapshot(man, blobs, {}), path)
+    return full, entry
+
+
+def test_reader_reassembles_cross_shard_slices(tmp_path):
+    path = str(tmp_path / "ck")
+    full, entry = _two_shard_checkpoint(path)
+    rd = sharded._ShardReader(path)
+    # a slice crossing the shard boundary (what a resharded mesh asks for)
+    got = rd.read(entry, ((1, 3), (1, 4)))
+    np.testing.assert_array_equal(got, full[1:3, 1:4])
+    # exact shard fast path and full read
+    np.testing.assert_array_equal(rd.read(entry, ((0, 2), (0, 4))),
+                                  full[:2])
+    np.testing.assert_array_equal(rd.read(entry, ((0, 4), (0, 4))), full)
+
+
+def test_reader_detects_coverage_holes(tmp_path):
+    path = str(tmp_path / "ck")
+    _, entry = _two_shard_checkpoint(path)
+    holey = MF.LeafEntry(entry.shape, entry.dtype, entry.spec,
+                         entry.shards[:1])     # second shard "lost"
+    rd = sharded._ShardReader(path)
+    with pytest.raises(ValueError, match="cover"):
+        rd.read(holey, ((0, 4), (0, 4)))
+
+
+def test_reader_missing_shard_file(tmp_path):
+    path = str(tmp_path / "ck")
+    _, entry = _two_shard_checkpoint(path)
+    os.remove(os.path.join(path, "shard-d00001.npz"))
+    rd = sharded._ShardReader(path)
+    with pytest.raises(FileNotFoundError, match="shard"):
+        rd.read(entry, ((0, 4), (0, 4)))
+
+
+# -- async writer ------------------------------------------------------
+
+class _SlowWriter:
+    """Instrumented write_fn: records concurrency and completion, and
+    holds the write open until released."""
+
+    def __init__(self, delay=0.0):
+        self.delay = delay
+        self.active = 0
+        self.max_active = 0
+        self.done = []
+        self._lock = threading.Lock()
+
+    def __call__(self, snap, path):
+        with self._lock:
+            self.active += 1
+            self.max_active = max(self.max_active, self.active)
+        time.sleep(self.delay)
+        sharded.write_snapshot(snap, path)
+        with self._lock:
+            self.active -= 1
+            self.done.append(path)
+
+
+def test_async_writer_overlaps_and_snapshots(tmp_path):
+    """The save must (a) return while the write is still in flight --
+    the caller can keep training -- and (b) capture the values at
+    submit time, immune to later in-place updates."""
+    slow = _SlowWriter(delay=1.0)
+    w = AsyncCheckpointWriter(write_fn=slow)
+    params = {"w": jnp.arange(8.0)}
+    path = str(tmp_path / "ck")
+    w.save(path, {"params": params}, step=3)
+    assert w.in_flight                       # returned before the write
+    # "one train step" of work completes while the write is in flight
+    params = {"w": params["w"] * 2.0}
+    jax.block_until_ready(params["w"])
+    assert w.in_flight
+    w.wait()
+    assert not w.in_flight and slow.done == [path]
+    got, _, step = ckpt_io.restore(path)
+    assert step == 3
+    np.testing.assert_array_equal(got["w"], np.arange(8.0))  # pre-mutation
+
+
+def test_async_writer_in_flight_guard(tmp_path):
+    """At most one write in flight: a second save waits for the first,
+    and both land completely."""
+    slow = _SlowWriter(delay=0.2)
+    w = AsyncCheckpointWriter(write_fn=slow)
+    p1, p2 = str(tmp_path / "a"), str(tmp_path / "b")
+    w.save(p1, {"params": {"x": jnp.zeros(4)}}, step=1)
+    w.save(p2, {"params": {"x": jnp.ones(4)}}, step=2)   # guard: waits
+    w.wait()
+    assert slow.max_active == 1
+    assert slow.done == [p1, p2]
+    assert ckpt_io.restore(p1)[2] == 1 and ckpt_io.restore(p2)[2] == 2
+
+
+def test_async_writer_raises_write_errors_at_wait(tmp_path):
+    def boom(snap, path):
+        raise IOError("disk full")
+    w = AsyncCheckpointWriter(write_fn=boom)
+    w.save(str(tmp_path / "ck"), {"params": {"x": jnp.zeros(2)}})
+    with pytest.raises(IOError, match="disk full"):
+        w.wait()
+    w.wait()                                  # error consumed; reusable
+
+
+# -- pipeline cursor ---------------------------------------------------
+
+def test_pipeline_cursor_tracks_and_restores():
+    from repro.configs.registry import get_config
+    from repro.data.pipeline import make_pipeline
+    cfg = get_config("weathermixer-1b").reduced()
+    pipe = make_pipeline(cfg, batch_size=2, prefetch=0)
+    list(pipe.iterate([1, 1, 1]))
+    assert pipe.state() == {"cursor": 3}
+    # a fresh pipeline restored to cursor=3 continues the same stream
+    fresh = make_pipeline(cfg, batch_size=2, prefetch=0)
+    fresh.set_state({"cursor": 3})
+    nxt = next(iter(fresh.iterate([2])))
+    want = pipe.get(3, 2)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(nxt[k]),
+                                      np.asarray(want[k]))
+
+
+# -- engine exact resume (single device) -------------------------------
+
+def test_engine_exact_resume(tmp_path):
+    from repro.launch.engine import EngineConfig, TrainEngine
+    path = str(tmp_path / "ck")
+
+    def engine(**kw):
+        return TrainEngine("internlm2-1.8b",
+                           config=EngineConfig(steps=4, batch=2,
+                                               seq_len=16, log_every=1,
+                                               rollout=2, **kw))
+
+    h_full = engine().run()
+    engine(ckpt=path, ckpt_every=2).run()     # checkpoints at step 3
+    resumed = engine(resume=path + "-2")
+    assert resumed.step_idx == 3
+    h_res = resumed.run()
+    tail = [h for h in h_full if h["step"] >= 3]
+    assert len(h_res) == len(tail) == 1
+    assert h_res[0]["loss"] == tail[0]["loss"]
+    assert h_res[0]["lr"] == tail[0]["lr"]
+    assert h_res[0]["grad_norm"] == tail[0]["grad_norm"]
+
+
+def test_engine_resume_rejects_schedule_mismatch(tmp_path):
+    from repro.launch.engine import EngineConfig, TrainEngine
+    path = str(tmp_path / "ck")
+    TrainEngine("internlm2-1.8b",
+                config=EngineConfig(steps=2, batch=2, seq_len=16,
+                                    log_every=1, seed=0, ckpt=path)).run()
+    with pytest.raises(ValueError, match="seed"):
+        TrainEngine("internlm2-1.8b",
+                    config=EngineConfig(steps=2, batch=2, seq_len=16,
+                                        log_every=1, seed=1, resume=path))
+
+
+# -- multi-device: sharded save + resharded restore --------------------
+
+def test_ckpt_sharded_reshard_scenario():
+    """16 emulated devices in a subprocess: per-rank byte accounting
+    (no full-model gather) + save-on-8-way / restore-on-4-way."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env.pop("JAX_PLATFORMS", None)
+    res = subprocess.run(
+        [sys.executable, os.path.join(HERE, "dist_scenarios.py"),
+         "ckpt_sharded_reshard"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0 and "ALL-OK" in res.stdout, (
+        f"\nstdout:\n{res.stdout[-3000:]}\nstderr:\n{res.stderr[-3000:]}")

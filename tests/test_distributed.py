@@ -23,6 +23,10 @@ SCENARIOS = [
     "input_pipeline",
     "engine_pipeline",
     "zero1_engine",
+    # ckpt_sharded_reshard runs via tests/test_checkpoint.py (the
+    # checkpoint CI job needs it there; listing it here too would
+    # double its cost in tier-1)
+    "resume_exact",
 ]
 
 

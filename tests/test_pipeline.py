@@ -128,9 +128,10 @@ def test_engine_matches_legacy_format_and_evaluates(tmp_path):
     assert np.isfinite(hist[-1]["loss"])
     em = eng.evaluate()
     assert np.isfinite(em["val_loss"])
-    # checkpoint hook
+    # checkpoint hook (async by default: wait_checkpoints is the barrier)
     path = str(tmp_path / "ck")
     eng.save(path)
+    eng.wait_checkpoints()
     from repro.checkpoint import io as ckpt_io
     import jax
     from repro.models import registry as M
