@@ -59,7 +59,9 @@ def _leaf_shards(leaf):
             yield (MF.normalize_index(s.index, leaf.shape),
                    s.device.id, np.asarray(s.data))
     else:
-        arr = np.asarray(leaf)
+        # copy=True: the Snapshot must capture values at submit time,
+        # even for host-numpy leaves the caller mutates in place later
+        arr = np.array(leaf, copy=True)
         yield (tuple((0, d) for d in arr.shape), 0, arr)
 
 
@@ -159,7 +161,7 @@ class _ShardReader:
         self.path = path
         self._files: Dict[str, Any] = {}
 
-    def member(self, shard: ShardEntry) -> np.ndarray:
+    def member(self, shard: ShardEntry, dtype: np.dtype) -> np.ndarray:
         f = self._files.get(shard.file)
         if f is None:
             fname = os.path.join(self.path, shard.file)
@@ -170,16 +172,27 @@ class _ShardReader:
                     f"one host's files?)")
             f = np.load(fname)
             self._files[shard.file] = f
-        return f[shard.key]
+        raw = f[shard.key]
+        # npz stores extension dtypes (bfloat16, float8_*) as raw void
+        # bytes ('|Vn'); reinterpret against the manifest's dtype so the
+        # values survive the round-trip
+        if raw.dtype == dtype:
+            return raw
+        if raw.dtype.kind == "V" and raw.dtype.itemsize == dtype.itemsize:
+            return raw.view(dtype)
+        return raw.astype(dtype, copy=False)
 
     def read(self, entry: LeafEntry, req: Bounds) -> np.ndarray:
         """The ``req`` slice of a global leaf, assembled from every
         saved shard that overlaps it."""
+        dtype = np.dtype(entry.dtype)
         for sh in entry.shards:                      # exact-match fast path
             if sh.bounds == req:
-                return self.member(sh)
-        out = np.empty([b - a for a, b in req], np.dtype(entry.dtype))
-        covered = 0
+                return self.member(sh, dtype)
+        out = np.empty([b - a for a, b in req], dtype)
+        # boolean coverage mask: overlapping shards must not be able to
+        # mask a hole (summing overlap volumes double-counts)
+        filled = np.zeros(out.shape, dtype=bool)
         for sh in entry.shards:
             ov = tuple((max(a0, b0), min(a1, b1)) for (a0, a1), (b0, b1)
                        in zip(sh.bounds, req))
@@ -189,13 +202,12 @@ class _ShardReader:
                         in zip(ov, sh.bounds))
             dst = tuple(slice(a - r0, b - r0) for (a, b), (r0, _r1)
                         in zip(ov, req))
-            out[dst] = self.member(sh)[src]
-            covered += int(np.prod([b - a for a, b in ov]))
-        want = int(np.prod([b - a for a, b in req])) if req else 1
-        if covered != want:
+            out[dst] = self.member(sh, dtype)[src]
+            filled[dst] = True
+        if not filled.all():
             raise ValueError(
-                f"shards cover {covered}/{want} elements of slice {req} "
-                f"-- manifest inconsistent with shard files")
+                f"shards cover {int(filled.sum())}/{filled.size} elements "
+                f"of slice {req} -- manifest inconsistent with shard files")
         return out
 
 

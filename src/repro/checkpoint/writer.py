@@ -55,6 +55,12 @@ class AsyncCheckpointWriter:
     def wait(self) -> None:
         """Block until the in-flight write (if any) finishes; re-raise
         its error here."""
+        with self._lock:
+            self._wait_locked()
+
+    def _wait_locked(self) -> None:
+        # caller holds self._lock; the worker never takes it, so joining
+        # under the lock cannot deadlock
         t = self._thread
         if t is not None:
             t.join()
@@ -74,7 +80,7 @@ class AsyncCheckpointWriter:
         degrades to a synchronous save (the A/B baseline the ckpt_io
         benchmark measures against)."""
         with self._lock:
-            self.wait()                       # in-flight guard
+            self._wait_locked()               # in-flight guard
             snap = sharded.snapshot(groups, step=step, extra=extra,
                                     mesh=mesh)
             self.saves += 1

@@ -52,6 +52,55 @@ def test_facade_roundtrip_layout_and_meta(tmp_path):
         assert a.dtype == np.asarray(b).dtype   # int32 leaf survives
 
 
+def test_bfloat16_roundtrip(tmp_path):
+    """Regression: npz stores bf16 as raw void ('|V2'); restore must
+    reinterpret against the manifest dtype, not hand back garbage.
+    Production configs default to param_dtype='bfloat16', so this is
+    the dtype real-run checkpoints actually use."""
+    params = {"w": jnp.arange(12.0, dtype=jnp.bfloat16).reshape(3, 4),
+              "s": jnp.float32(2.0)}
+    path = str(tmp_path / "ck")
+    ckpt_io.save(path, params, step=7)
+    p2, _, step = ckpt_io.restore(path, like_params=params)
+    assert step == 7
+    assert p2["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(p2["w"], np.float32),
+                                  np.asarray(params["w"], np.float32))
+
+
+def test_bfloat16_cross_shard_reassembly(tmp_path):
+    """bf16 must also survive the slow path (slice assembly from
+    multiple shard files, not the exact-match member fast path)."""
+    full = np.asarray(jnp.arange(16, dtype=jnp.bfloat16).reshape(4, 4))
+    shards = (MF.ShardEntry("shard-d00000.npz", "params/w#0",
+                            ((0, 2), (0, 4)), 0),
+              MF.ShardEntry("shard-d00001.npz", "params/w#0",
+                            ((2, 4), (0, 4)), 1))
+    entry = MF.LeafEntry((4, 4), "bfloat16", [None, None], shards)
+    man = MF.Manifest(step=0, groups={"params": {"w": entry}})
+    blobs = {"shard-d00000.npz": {"params/w#0": full[:2]},
+             "shard-d00001.npz": {"params/w#0": full[2:]}}
+    path = str(tmp_path / "ck")
+    sharded.write_snapshot(sharded.Snapshot(man, blobs, {}), path)
+    rd = sharded._ShardReader(path)
+    got = rd.read(entry, ((1, 3), (0, 4)))       # crosses the boundary
+    assert got.dtype == np.dtype("bfloat16")
+    np.testing.assert_array_equal(got.astype(np.float32),
+                                  full[1:3].astype(np.float32))
+
+
+def test_snapshot_copies_host_numpy_leaves(tmp_path):
+    """The snapshot must capture values at submit time even for plain
+    numpy leaves the caller mutates in place afterwards."""
+    arr = np.arange(6.0)
+    snap = sharded.snapshot({"params": {"x": arr}}, step=0)
+    arr *= 100.0
+    path = str(tmp_path / "ck")
+    sharded.write_snapshot(snap, path)
+    got, _, _ = ckpt_io.restore(path)
+    np.testing.assert_array_equal(got["x"], np.arange(6.0))
+
+
 def test_restore_validates_shape_with_keypath(tmp_path):
     path = str(tmp_path / "ck")
     ckpt_io.save(path, _params(), step=1)
@@ -142,6 +191,26 @@ def test_reader_detects_coverage_holes(tmp_path):
     rd = sharded._ShardReader(path)
     with pytest.raises(ValueError, match="cover"):
         rd.read(holey, ((0, 4), (0, 4)))
+
+
+def test_reader_overlapping_shards_dont_mask_holes(tmp_path):
+    """Coverage is a boolean mask, not a volume sum: two shards that
+    overlap each other but leave a hole must still raise, not return
+    np.empty garbage in the hole."""
+    full = np.arange(16, dtype=np.float32).reshape(4, 4)
+    shards = (MF.ShardEntry("shard-d00000.npz", "params/w#0",
+                            ((0, 2), (0, 4)), 0),
+              MF.ShardEntry("shard-d00000.npz", "params/w#1",
+                            ((0, 2), (0, 4)), 0))   # duplicate block
+    entry = MF.LeafEntry((4, 4), "float32", [None, None], shards)
+    man = MF.Manifest(step=0, groups={"params": {"w": entry}})
+    blobs = {"shard-d00000.npz": {"params/w#0": full[:2],
+                                  "params/w#1": full[:2]}}
+    path = str(tmp_path / "ck")
+    sharded.write_snapshot(sharded.Snapshot(man, blobs, {}), path)
+    rd = sharded._ShardReader(path)
+    with pytest.raises(ValueError, match="cover"):
+        rd.read(entry, ((0, 4), (0, 4)))   # rows 2:4 uncovered
 
 
 def test_reader_missing_shard_file(tmp_path):
