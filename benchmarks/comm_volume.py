@@ -10,6 +10,13 @@ The chunked ring moves EXACTLY the same bytes as the monolithic ring
 (asserted on the compiled HLO below); the per-hop table shows what it
 changes instead -- the GEMM work left pending while each hop's send is
 in flight (comm_schedule_jigsaw_1d).
+
+Precision policy (ISSUE 5): the bf16 compute policy must HALVE the ring
+bytes -- every ppermute chunk ships compute_dtype.  Asserted on the
+PRE-optimization HLO (``compiler_ir('hlo')``): that is where the wire
+dtype is a program property; backend legalization may rewrite it (the
+CPU backend widens bf16 collectives to f32 because the host has no
+native bf16 -- on TPU the compiled module keeps the bf16 wire).
 """
 from benchmarks.common import emit, run_subprocess_devices
 
@@ -29,6 +36,21 @@ for impl in ["rs", "ring", "ring_chunked", "allreduce", "gspmd"]:
             params, x).compile()
     st = collective_stats(comp.as_text())
     print(f"IMPL {impl} bytes {st.total_bytes:.0f} counts {st.counts}")
+
+# precision A/B on the unoptimized HLO: bf16 wire == 0.5x fp32 wire
+for impl in ["rs", "ring", "ring_chunked"]:
+    res = {}
+    for prec, cd in [("fp32", None), ("bf16", jnp.bfloat16)]:
+        cfg = JigsawConfig(impl=impl, compute_dtype=cd)
+        with jax.set_mesh(mesh):
+            low = jax.jit(lambda p, v: mlp_apply(p, v, cfg)).lower(
+                params, x)
+        st = collective_stats(low.compiler_ir(dialect="hlo").as_hlo_text())
+        res[prec] = st.total_bytes
+    ratio = res["bf16"] / res["fp32"]
+    assert abs(ratio - 0.5) < 1e-6, (impl, res)
+    print(f"PREC {impl} fp32 {res['fp32']:.0f} bf16 {res['bf16']:.0f} "
+          f"ratio {ratio:.3f}")
 """
 
 
@@ -54,21 +76,34 @@ def run():
                  f"jigsaw1d={an_j:.0f}|megatron_pair={an_m:.0f}"
                  f"|jigsaw_vs_megatron={an_j / an_m:.2f}"))
 
+    # precision A/B (asserted in-subprocess): bf16 wire == 0.5x fp32
+    for line in out.splitlines():
+        if line.startswith("PREC"):
+            parts = line.split()
+            rows.append((f"comm/precision/{parts[1]}", 0,
+                         f"fp32_bytes={parts[3]}|bf16_bytes={parts[5]}"
+                         f"|ratio={parts[7]}"))
+
     # chunked-ring per-hop accounting: same volume, overlap exposed.
-    # Shapes mirror the HLO experiment (fc1 of the MLP pair, p=4, f32).
+    # Shapes mirror the HLO experiment (fc1 of the MLP pair, p=4); the
+    # bf16 rows halve bytes_per_hop at the same flops_per_hop, doubling
+    # the per-hop overlap headroom.
     same = ("ring" in hlo_bytes and "ring_chunked" in hlo_bytes
             and hlo_bytes["ring"] == hlo_bytes["ring_chunked"])
     rows.append(("comm/ring_vs_chunked", 0,
                  f"hlo_bytes_equal={same}"))
-    for chunked in (False, True):
-        cs = comm_schedule_jigsaw_1d(256, 2048, 512 // 4, 4,
-                                     dtype_bytes=4, chunked=chunked)
-        rows.append((f"comm/schedule/{cs.scheme}", 0,
-                     f"hops={cs.hops}|bytes_per_hop={cs.bytes_per_hop:.0f}"
-                     f"|flops_per_hop={cs.flops_per_hop:.2e}"
-                     f"|bytes_per_dev={cs.bytes_per_device:.0f}"
-                     f"|overlap_ratio="
-                     f"{cs.overlap_ratio(A.ICI_BW, A.PEAK_FLOPS_BF16):.2f}"))
+    for prec, dtype_bytes in (("fp32", 4), ("bf16", 2)):
+        for chunked in (False, True):
+            cs = comm_schedule_jigsaw_1d(256, 2048, 512 // 4, 4,
+                                         dtype_bytes=dtype_bytes,
+                                         chunked=chunked)
+            rows.append((f"comm/schedule/{cs.scheme}/{prec}", 0,
+                         f"hops={cs.hops}"
+                         f"|bytes_per_hop={cs.bytes_per_hop:.0f}"
+                         f"|flops_per_hop={cs.flops_per_hop:.2e}"
+                         f"|bytes_per_dev={cs.bytes_per_device:.0f}"
+                         f"|overlap_ratio="
+                         f"{cs.overlap_ratio(A.ICI_BW, A.PEAK_FLOPS_BF16):.2f}"))
     return rows
 
 

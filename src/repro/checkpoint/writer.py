@@ -22,8 +22,9 @@ Guards:
 """
 from __future__ import annotations
 
+import shutil
 import threading
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from jax.sharding import Mesh
 
@@ -72,13 +73,20 @@ class AsyncCheckpointWriter:
     # -- submission -----------------------------------------------------
     def save(self, path: str, groups: Dict[str, Any], *, step: int = 0,
              extra: Optional[dict] = None, mesh: Optional[Mesh] = None,
-             block: bool = False) -> sharded.Snapshot:
+             block: bool = False,
+             prune: Optional[List[str]] = None) -> sharded.Snapshot:
         """Snapshot ``groups`` now; write them in the background.
 
         Returns the Snapshot (its ``bytes_per_rank`` is the per-rank
         byte accounting asserted by the dist scenarios).  ``block=True``
         degrades to a synchronous save (the A/B baseline the ckpt_io
-        benchmark measures against)."""
+        benchmark measures against).
+
+        ``prune`` lists older checkpoint directories to delete (the
+        engine's keep-last-k GC) -- removed only AFTER this save's files
+        are fully on disk, so an interrupted write never leaves the run
+        with fewer durable checkpoints than before."""
+        prune = list(prune or [])
         with self._lock:
             self._wait_locked()               # in-flight guard
             snap = sharded.snapshot(groups, step=step, extra=extra,
@@ -86,11 +94,13 @@ class AsyncCheckpointWriter:
             self.saves += 1
             if block:
                 self._write_fn(snap, path)
+                self._prune(prune)
                 return snap
 
             def work():
                 try:
                     self._write_fn(snap, path)
+                    self._prune(prune)
                 except BaseException as e:    # surfaced at next wait()
                     self._error = e
 
@@ -98,3 +108,9 @@ class AsyncCheckpointWriter:
                 target=work, name=f"ckpt-writer:{path}", daemon=True)
             self._thread.start()
             return snap
+
+    @staticmethod
+    def _prune(paths: List[str]) -> None:
+        """Delete GC'd checkpoint dirs (missing ones are fine)."""
+        for p in paths:
+            shutil.rmtree(p, ignore_errors=True)

@@ -70,6 +70,9 @@ class ModelConfig:
     # --- numerics ---
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
+    precision: Optional[str] = None        # policy preset (core/precision):
+                                           # fp32|bf16|bf16_pure; None =
+                                           # legacy dtypes above, fp32 accum
     # --- parallelism defaults (overridable from the launcher) ---
     scheme: str = "1d"                     # jigsaw scheme: 1d|2d|none
     impl: str = "rs"                       # 1d impl: ring|ring_chunked|rs|
@@ -124,7 +127,7 @@ class ModelConfig:
         """Smoke-test variant: same family/topology, tiny dims."""
         kw = dict(
             n_layers=2, d_model=min(self.d_model, 256),
-            param_dtype="float32", compute_dtype="float32",
+            param_dtype="float32", compute_dtype="float32", precision=None,
             scheme="none", remat=False, shard_params_over_data=False,
             # pallas on CPU is interpret-mode (slow): smoke tests opt in
             # explicitly instead of inheriting the production default

@@ -44,6 +44,10 @@ class JigsawConfig:
     accum_dtype: Optional[jnp.dtype] = jnp.float32
     fsdp: bool = False            # weights also sharded over data (huge archs)
     kernel: str = "xla"           # "xla" | "pallas" (local GEMM engine)
+    # precision-policy compute dtype (core/precision): every linear casts
+    # its operands here before the GEMM/collectives, so bf16 halves both
+    # MXU time and per-hop ring bytes.  None = no cast (legacy).
+    compute_dtype: Optional[jnp.dtype] = None
 
     def replace(self, **kw) -> "JigsawConfig":
         return dataclasses.replace(self, **kw)
@@ -98,15 +102,18 @@ def linear_apply(params, x: jax.Array, cfg: JigsawConfig = DEFAULT_JIGSAW,
         y = jigsaw.jigsaw_linear_2d(x, w, b, rules=cfg.rules,
                                     domain_dim=domain_dim,
                                     accum_dtype=cfg.accum_dtype,
-                                    kernel=cfg.kernel)
+                                    kernel=cfg.kernel,
+                                    compute_dtype=cfg.compute_dtype)
         return y if act is None else act(y)
     if cfg.scheme == "1d":
         y = jigsaw.jigsaw_linear(x, w, b, rules=cfg.rules, impl=cfg.impl,
                                  accum_dtype=cfg.accum_dtype,
                                  w_data_sharded=cfg.fsdp,
-                                 kernel=cfg.kernel)
+                                 kernel=cfg.kernel,
+                                 compute_dtype=cfg.compute_dtype)
         return y if act is None else act(y)
     # scheme="none": plain local matmul (single-device / inside-shard_map)
+    x, w, b = jigsaw._cast_operands(x, w, b, cfg.compute_dtype)
     if cfg.kernel == "pallas":
         # contraction completes in-kernel: bias + activation ride the
         # fused epilogue, the activation never round-trips to HBM.
@@ -139,8 +146,11 @@ def mlp_apply(params, x: jax.Array, cfg: JigsawConfig = DEFAULT_JIGSAW,
         # run in its VMEM epilogue, the hidden activation feeds the
         # second GEMM without an unfused elementwise pass between.
         from repro.kernels import ops
-        return ops.mixer_mlp(x, params["fc1"]["w"], params["fc1"].get("b"),
-                             params["fc2"]["w"], params["fc2"].get("b"))
+        x, w1, b1 = jigsaw._cast_operands(
+            x, params["fc1"]["w"], params["fc1"].get("b"), cfg.compute_dtype)
+        _, w2, b2 = jigsaw._cast_operands(
+            x, params["fc2"]["w"], params["fc2"].get("b"), cfg.compute_dtype)
+        return ops.mixer_mlp(x, w1, b1, w2, b2)
     h = linear_apply(params["fc1"], x, cfg, domain_dim=domain_dim)
     h = activation(h)
     return linear_apply(params["fc2"], h, cfg, domain_dim=domain_dim)

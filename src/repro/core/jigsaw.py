@@ -70,7 +70,8 @@ Kernels = ("xla", "pallas")
 # --------------------------------------------------------------------------
 
 def ring_reduce_scatter(x: jax.Array, axis_name: str, axis_size: int,
-                        scatter_dim: int = -1) -> jax.Array:
+                        scatter_dim: int = -1,
+                        accum_dtype: Optional[jnp.dtype] = None) -> jax.Array:
     """Ring reduce-scatter of ``x`` along ``axis_name``.
 
     Every rank holds a full partial sum ``x``; afterwards rank ``r`` holds
@@ -78,6 +79,13 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str, axis_size: int,
     n-way generalization of the paper's 2-way partial-sum exchange: at each
     of the p-1 steps a rank forwards its accumulator to the next neighbour
     while (in the lowered schedule) computing/adding the next local chunk.
+
+    Mixed precision (core/precision): the WIRE format is ``x.dtype`` --
+    every ``ppermute`` hop ships x.dtype bytes (bf16 halves per-hop ICI
+    volume vs fp32) -- while the adds between hops run in ``accum_dtype``
+    (rounding once per hop at the cast-down for the wire instead of
+    accumulating error in bf16).  ``accum_dtype=None`` or == x.dtype is
+    bit-identical to the unparameterized schedule.
     """
     p = axis_size
     if p == 1:
@@ -88,9 +96,11 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str, axis_size: int,
             f"ring_reduce_scatter: dim {dim} of {x.shape} not divisible by {p}")
     chunk = x.shape[dim] // p
     idx = jax.lax.axis_index(axis_name)
+    acc_dt = accum_dtype or x.dtype
 
     def get(j):
-        return jax.lax.dynamic_slice_in_dim(x, j * chunk, chunk, axis=dim)
+        c = jax.lax.dynamic_slice_in_dim(x, j * chunk, chunk, axis=dim)
+        return c.astype(acc_dt)
 
     perm = [(i, (i + 1) % p) for i in range(p)]
     # Initialize with the chunk destined for our successor ring-walk; after
@@ -98,9 +108,9 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str, axis_size: int,
     # global sum (see tests/test_jigsaw.py for the algebra check).
     acc = get((idx + p - 1) % p)
     for s in range(p - 1):
-        acc = jax.lax.ppermute(acc, axis_name, perm)
-        acc = acc + get((idx - 2 - s) % p)
-    return acc
+        acc = jax.lax.ppermute(acc.astype(x.dtype), axis_name, perm)
+        acc = acc.astype(acc_dt) + get((idx - 2 - s) % p)
+    return acc.astype(x.dtype)
 
 
 def ring_all_gather(x: jax.Array, axis_name: str, axis_size: int,
@@ -165,6 +175,11 @@ def ring_matmul_chunked(x: jax.Array, w: jax.Array, *, axis_name: str,
     GEMM is still pending, giving XLA (and the ICI DMA engines) a
     dependency graph in which communication overlaps computation -- the
     paper's "each hop's send overlaps the next chunk's compute".
+
+    Wire format is ``x.dtype`` (bf16 compute halves per-hop bytes); the
+    hop-to-hop adds run in ``accum_dtype`` -- the same cast points as
+    ``ring_reduce_scatter``, so ring_chunked == ring stays bit-identical
+    under every precision policy.
     """
     p = axis_size
     if p == 1:
@@ -175,12 +190,15 @@ def ring_matmul_chunked(x: jax.Array, w: jax.Array, *, axis_name: str,
             f"ring_matmul_chunked: out dim {m} not divisible by {p}")
     chunk = m // p
     idx = jax.lax.axis_index(axis_name)
+    acc_dt = accum_dtype or x.dtype
 
     def chunk_mm(j):
-        # GEMM of one output-chunk: x @ w[j*chunk:(j+1)*chunk].T -- the
-        # reduction stays in compute dtype, same as the other impls.
+        # GEMM of one output-chunk: x @ w[j*chunk:(j+1)*chunk].T -- cast
+        # to the compute (wire) dtype first, exactly like the monolithic
+        # ring's partial_sum, then up to the accumulation dtype.
         wj = jax.lax.dynamic_slice_in_dim(w, j * chunk, chunk, axis=0)
-        return _local_matmul(x, wj, accum_dtype, kernel).astype(x.dtype)
+        y = _local_matmul(x, wj, accum_dtype, kernel).astype(x.dtype)
+        return y.astype(acc_dt)
 
     perm = [(i, (i + 1) % p) for i in range(p)]
     # Same walk as ring_reduce_scatter: start with the chunk destined for
@@ -188,9 +206,9 @@ def ring_matmul_chunked(x: jax.Array, w: jax.Array, *, axis_name: str,
     # ``idx`` of the global sum.
     acc = chunk_mm((idx + p - 1) % p)
     for s in range(p - 1):
-        acc = jax.lax.ppermute(acc, axis_name, perm)
-        acc = acc + chunk_mm((idx - 2 - s) % p)
-    return acc
+        acc = jax.lax.ppermute(acc.astype(x.dtype), axis_name, perm)
+        acc = acc.astype(acc_dt) + chunk_mm((idx - 2 - s) % p)
+    return acc.astype(x.dtype)
 
 
 def jigsaw_matmul_1d(x: jax.Array, w: jax.Array, *, axis_name: str,
@@ -211,7 +229,8 @@ def jigsaw_matmul_1d(x: jax.Array, w: jax.Array, *, axis_name: str,
     # transposed allgather in backward) at negligible accuracy cost
     partial_sum = partial_sum.astype(x.dtype)
     if impl == "ring":
-        out = ring_reduce_scatter(partial_sum, axis_name, axis_size)
+        out = ring_reduce_scatter(partial_sum, axis_name, axis_size,
+                                  accum_dtype=accum_dtype)
     elif impl == "rs":
         out = jax.lax.psum_scatter(partial_sum, axis_name,
                                    scatter_dimension=partial_sum.ndim - 1,
@@ -234,11 +253,23 @@ def _present_batch_axes(mesh, rules: ShardingRules):
     return tuple(a for a in rules.batch_axes if a in mesh.shape)
 
 
+def _cast_operands(x, w, b, compute_dtype):
+    """Cast a linear's operands to the policy compute dtype (the block-
+    boundary cast: params stored in param_dtype, GEMMs + collectives run
+    in compute_dtype).  No-ops when dtypes already match."""
+    if compute_dtype is None:
+        return x, w, b
+    cd = jnp.dtype(compute_dtype)
+    return (x.astype(cd), w.astype(cd),
+            None if b is None else b.astype(cd))
+
+
 def jigsaw_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
                   *, rules: ShardingRules, mesh=None, impl: str = "rs",
                   accum_dtype: Optional[jnp.dtype] = jnp.float32,
                   w_data_sharded: bool = False,
-                  kernel: str = "xla") -> jax.Array:
+                  kernel: str = "xla",
+                  compute_dtype: Optional[jnp.dtype] = None) -> jax.Array:
     """Public 1-D Jigsaw linear: ``y = x @ w.T (+ b)``.
 
     Layouts (global view):
@@ -256,6 +287,7 @@ def jigsaw_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     ``impl='gspmd'`` skips the explicit collectives entirely (sharding
     constraints only; beyond-paper comparison).
     """
+    x, w, b = _cast_operands(x, w, b, compute_dtype)
     tp = rules.tp_axis
     if mesh is None:
         mesh = get_abstract_mesh()
@@ -391,16 +423,22 @@ def jigsaw_linear_2d(x: jax.Array, w: jax.Array,
                      b: Optional[jax.Array] = None, *, rules: ShardingRules,
                      mesh=None, domain_dim: int = -2,
                      accum_dtype: Optional[jnp.dtype] = jnp.float32,
-                     kernel: str = "xla") -> jax.Array:
+                     kernel: str = "xla",
+                     compute_dtype: Optional[jnp.dtype] = None) -> jax.Array:
     """Public 2-D Jigsaw linear (paper's 4-way, generalized).
 
     Global layouts:
       x: [..., n, d]  n on ``mdom``, d on ``mtp``
       w: [m, d]       m on ``mtp``,  d on ``mdom``   (Cannon layout)
       y: [..., n, m]  n on ``mdom``, m on ``mtp``  -- same as x: composable.
+
+    Cannon rotates the OPERAND blocks, so the wire format is simply the
+    (policy-cast) operand dtype -- bf16 compute halves the skew/rotate
+    bytes; the q-step accumulator stays in ``accum_dtype``.
     """
     if not rules.is_2d:
         raise ValueError("jigsaw_linear_2d requires 2-D ShardingRules")
+    x, w, b = _cast_operands(x, w, b, compute_dtype)
     dom, tp = rules.dom_axis, rules.tp_axis
     if mesh is None:
         mesh = get_abstract_mesh()
@@ -483,7 +521,8 @@ def jigsaw_matmul_2d_t(x: jax.Array, w: jax.Array, *, dom_axis: str,
 def jigsaw_linear_2d_t(x: jax.Array, w: jax.Array,
                        b: Optional[jax.Array] = None, *,
                        rules: ShardingRules, mesh=None,
-                       accum_dtype: Optional[jnp.dtype] = jnp.float32
+                       accum_dtype: Optional[jnp.dtype] = jnp.float32,
+                       compute_dtype: Optional[jnp.dtype] = None
                        ) -> jax.Array:
     """Public 2-D Jigsaw transposed linear: ``y[..., m, c] = w[m, t] @
     x[..., t, c] (+ b[:, None])``.
@@ -495,6 +534,7 @@ def jigsaw_linear_2d_t(x: jax.Array, w: jax.Array,
     """
     if not rules.is_2d:
         raise ValueError("jigsaw_linear_2d_t requires 2-D ShardingRules")
+    x, w, b = _cast_operands(x, w, b, compute_dtype)
     dom, tp = rules.dom_axis, rules.tp_axis
     if mesh is None:
         mesh = get_abstract_mesh()

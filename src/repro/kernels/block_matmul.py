@@ -27,6 +27,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def sublane(dtype) -> int:
+    """Minimum second-to-last tile dim for ``dtype`` on the TPU (f32 8,
+    bf16 16, int8/fp8 32) -- the single source of truth for both the
+    block shrink in ops.block_dims and the legality assert below."""
+    return {4: 8, 2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
+
+
 def _kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int,
             epilogue: str):
     k = pl.program_id(2)
@@ -64,9 +71,18 @@ def block_matmul(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     m, k = x.shape
     n, k2 = w.shape
     assert k == k2, (x.shape, w.shape)
+    assert x.dtype == w.dtype, (
+        f"block_matmul needs one operand dtype (got {x.dtype} vs "
+        f"{w.dtype}); cast at the linear-apply boundary (ops.py does)")
     assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
         f"shape ({m},{n},{k}) not divisible by blocks "
         f"({block_m},{block_n},{block_k})")
+    # bf16 tiles need a 16-row sublane (f32: 8); ops.block_dims floors the
+    # block sizes accordingly, so by here block_m is already legal
+    sl = sublane(x.dtype)
+    assert block_m % sl == 0 or block_m == m, (
+        f"block_m={block_m} below the {jnp.dtype(x.dtype).name} sublane "
+        f"floor {sl}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n_k = k // block_k

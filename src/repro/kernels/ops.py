@@ -23,7 +23,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.block_matmul import block_matmul
+from repro.kernels.block_matmul import block_matmul, sublane as _sublane
 
 _ACTS = {"gelu": jax.nn.gelu, "silu": jax.nn.silu}
 
@@ -39,11 +39,6 @@ def _pad_to(a: jax.Array, dim: int, mult: int) -> jax.Array:
 
 def _round_up(n: int, mult: int) -> int:
     return ((n + mult - 1) // mult) * mult
-
-
-def _sublane(dtype) -> int:
-    """Minimum second-to-last tile dim for ``dtype`` (f32 8, bf16 16...)."""
-    return {4: 8, 2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
 
 
 def block_dims(m: int, n: int, k: int, *, block_m: int, block_n: int,
@@ -62,7 +57,19 @@ def block_dims(m: int, n: int, k: int, *, block_m: int, block_n: int,
 
 
 def _matmul_raw(x, w, b, epilogue, block_m, block_n, block_k, interpret):
-    """Pad/shrink to the block grid, run the kernel, slice back."""
+    """Pad/shrink to the block grid, run the kernel, slice back.
+
+    bf16 inputs run the MXU at its half-width rate with fp32 VMEM
+    accumulation inside the kernel; ``block_dims`` widens the sublane
+    floor to 16 rows for 2-byte dtypes (the TPU tile constraint) so a
+    bf16 GEMM never issues an 8-row tile the hardware cannot form.
+    """
+    if w.dtype != x.dtype:
+        # policy casts happen at the linear-apply boundary; anything that
+        # still arrives mixed (e.g. an fp32 cotangent against bf16
+        # residuals) is unified to x's dtype -- the MXU needs one operand
+        # width and the f32 scratch keeps the accumulation exact either way
+        w = w.astype(x.dtype)
     m, k = x.shape
     n = w.shape[0]
     bm, bn, bk = block_dims(m, n, k, block_m=block_m, block_n=block_n,

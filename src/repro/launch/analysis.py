@@ -66,21 +66,29 @@ class CollectiveStats:
 
 
 def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """Split an HLO module's text into its computations.
+
+    Handles both the post-optimization header form
+    ``%name (params) -> type {`` and the pre-optimization short form
+    ``name {`` (``compiler_ir(dialect='hlo')`` -- which the precision
+    benchmarks parse, because backend legalization may rewrite
+    collective dtypes: CPU widens bf16 collectives to f32)."""
     comps: Dict[str, List[str]] = {}
     cur = None
     for line in hlo.splitlines():
         stripped = line.strip()
-        m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{",
-                     line)
-        if ("{" in line and ("->" in line or line.startswith("ENTRY"))
-                and not stripped.startswith("ROOT")):
-            m2 = re.search(r"%?([\w\.\-]+)\s*\(", line)
-            cur = m2.group(1) if m2 else f"comp{len(comps)}"
-            comps[cur] = []
-            continue
+        if (stripped.endswith("{") and not stripped.startswith("ROOT")
+                and "=" not in stripped.split("(")[0]
+                and not stripped.startswith("HloModule")):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?"
+                         r"\s*(?:->.*)?{$", stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
         if cur is not None:
             comps[cur].append(line)
-        if line.startswith("}"):
+        if line.startswith("}") or stripped == "}":
             cur = None
     return comps
 

@@ -28,6 +28,7 @@ Typical use:
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from contextlib import nullcontext
 from functools import partial
@@ -41,6 +42,7 @@ import jax.numpy as jnp
 from repro import checkpoint as ckpt
 from repro import compat
 from repro.configs.registry import get_config
+from repro.core import precision
 from repro.core.sharding import RULES_1D
 from repro.data.pipeline import InputPipeline, make_pipeline
 from repro.launch import shapes as SH
@@ -66,8 +68,11 @@ class EngineConfig:
     eval_batches: int = 2
     accum: int = 1             # microbatch gradient accumulation
     zero1: bool = False        # ZeRO-1: shard optimizer moments over data
+    precision: Optional[str] = None   # policy preset (core/precision):
+                               # fp32|bf16|bf16_pure; None = config dtypes
     ckpt: Optional[str] = None
     ckpt_every: int = 0        # 0 = only a final checkpoint (if ckpt set)
+    keep_ckpts: int = 0        # keep last k periodic ckpts (0 = keep all)
     resume: Optional[str] = None   # checkpoint dir: exact-resume from it
     async_save: bool = True    # background checkpoint writes (DESIGN §9)
     seed: int = 0
@@ -98,6 +103,13 @@ class TrainEngine:
             cfg = cfg.replace(impl=impl)
         if kernel:
             cfg = cfg.replace(kernel=kernel)
+        if config.precision:
+            # precision policy (core/precision, DESIGN.md §10): one
+            # replace threads param/compute dtypes into the config; the
+            # JigsawConfig (ring wire/accum dtypes) and AdamConfig
+            # (masters/moments) below are derived from the same policy
+            cfg = precision.apply_policy(cfg, config.precision)
+        self.policy = precision.policy_of(cfg)
 
         self.use_mesh = mesh_model * mesh_data > 1
         if self.use_mesh:
@@ -117,7 +129,28 @@ class TrainEngine:
         # may still hold them (e.g. fig56 evaluates the base model after)
         self.params = M.init(key, cfg) if init_params is None \
             else jax.tree.map(jnp.copy, init_params)
-        self.adam_cfg = adam.AdamConfig(weight_decay=0.0)
+        if init_params is not None and config.precision:
+            # external params adopt the policy's storage dtype (masters
+            # are re-derived fp32 from them in adam.init below)
+            self.params = jax.tree.map(
+                lambda p: p.astype(jnp.dtype(cfg.param_dtype))
+                if jnp.issubdtype(p.dtype, jnp.floating) else p,
+                self.params)
+        pol = self.policy
+        moment_dt = pol.moment_dtype
+        self.adam_cfg = adam.AdamConfig(
+            weight_decay=0.0, master_weights=pol.master_weights,
+            state_dtype=None if moment_dt is None
+            else jnp.dtype(moment_dt).name)
+        # Engine-level param-spec pinning (ROADMAP PR-3 follow-up): pin
+        # params to their jigsaw PartitionSpecs at init AND at every step
+        # output, so non-zero1 runs no longer come back GSPMD-replicated
+        # (which made sharded checkpoints dump all bytes on one rank).
+        self._param_shardings = None
+        if self.use_mesh:
+            self._param_shardings = self._param_pins()
+            self.params = jax.device_put(self.params,
+                                         self._param_shardings)
         self.opt_state = adam.init(self.params, self.adam_cfg)
         # ZeRO-1 (ROADMAP PR-1 leftover, DESIGN.md §6.5): moments sharded
         # over the data axis; the step output is pinned to the same
@@ -137,13 +170,18 @@ class TrainEngine:
             fn = make_train_step(cfg, self.jcfg, adam_cfg=self.adam_cfg,
                                  lr_fn=self.lr_fn, rollout=r,
                                  accum=config.accum)
-            if self._opt_shardings is not None:
-                base, osh = fn, self._opt_shardings
+            psh, osh = self._param_shardings, self._opt_shardings
+            if psh is not None or osh is not None:
+                base = fn
 
                 def fn(params, opt_state, batch):
                     p, o, m = base(params, opt_state, batch)
-                    o = jax.tree.map(jax.lax.with_sharding_constraint,
-                                     o, osh)
+                    if psh is not None:
+                        p = jax.tree.map(jax.lax.with_sharding_constraint,
+                                         p, psh)
+                    if osh is not None:
+                        o = jax.tree.map(jax.lax.with_sharding_constraint,
+                                         o, osh)
                     return p, o, m
             return jax.jit(fn, donate_argnums=(0, 1))
 
@@ -166,20 +204,34 @@ class TrainEngine:
         # snapshot on this thread, stream files from a background one
         self._writer = ckpt.AsyncCheckpointWriter()
         self.last_save = None      # Snapshot of the most recent save
+        self._ckpt_history: List[str] = []   # periodic dirs, oldest first
+        self._prune_backlog: List[str] = []  # GC'd paths pending deletion
+        self.best_val = float("inf")
+        self.best_ckpt: Optional[str] = None
         if config.resume:
             self._restore(config.resume)
 
     # -- construction helpers -------------------------------------------
+    def _param_pins(self):
+        """NamedShardings pinning every parameter to its jigsaw
+        PartitionSpec (launch/specs.param_specs)."""
+        from repro.launch import specs as S
+        pspecs = S.param_specs(self.params, self.cfg, self.rules, self.mesh)
+        pspecs = S.sanitize_tree(self.params, pspecs, self.mesh)
+        return S.to_shardings(pspecs, self.mesh)
+
     def _zero1_shardings(self):
-        """NamedShardings for the ZeRO-1 optimizer state: moments inherit
-        the param specs plus a data-axis shard on their first evenly
-        divisible unsharded dim (launch/specs.opt_specs)."""
+        """NamedShardings for the ZeRO-1 optimizer state: moments (and
+        fp32 masters under the bf16 policy) inherit the param specs plus
+        a data-axis shard on their first evenly divisible unsharded dim
+        (launch/specs.opt_specs)."""
         from repro.launch import specs as S
         pspecs = S.param_specs(self.params, self.cfg, self.rules, self.mesh)
         pspecs = S.sanitize_tree(self.params, pspecs, self.mesh)
         ospecs = S.opt_specs(self.opt_state["mu"], pspecs,
                              zero1_axis=self.rules.batch_axes[-1],
-                             mesh=self.mesh)
+                             mesh=self.mesh,
+                             master="master" in self.opt_state)
         ospecs = S.sanitize_tree(self.opt_state, ospecs, self.mesh)
         return S.to_shardings(ospecs, self.mesh)
 
@@ -221,14 +273,21 @@ class TrainEngine:
                     self.history.append(m)
                     print(f"step {i:5d}  loss {m['loss']:.4f}  "
                           f"lr {m['lr']:.2e}  ({m['wall_s']}s)")
+                pending_val = None
                 if c.eval_every and i and i % c.eval_every == 0:
                     em = self.evaluate()
                     self.history.append(dict(em, step=i, eval=True))
                     print(f"step {i:5d}  val_loss {em['val_loss']:.4f}")
+                    pending_val = em["val_loss"]
                 if on_step is not None:
                     on_step(i, metrics)
                 if c.ckpt and c.ckpt_every and i and i % c.ckpt_every == 0:
-                    self.save(f"{c.ckpt}-{i}")
+                    self.save(f"{c.ckpt}-{i}", periodic=True)
+                if pending_val is not None:
+                    # after the save: when eval and ckpt cadences align,
+                    # the marker points at THIS step's checkpoint, not
+                    # the previous one
+                    self._mark_best(pending_val)
         if c.ckpt:
             self.save(c.ckpt)
             print(f"checkpoint -> {c.ckpt}")
@@ -259,22 +318,75 @@ class TrainEngine:
         return out
 
     # -- checkpointing ---------------------------------------------------
-    def save(self, path: str, block: Optional[bool] = None) -> None:
+    def save(self, path: str, block: Optional[bool] = None,
+             periodic: bool = False) -> None:
         """Sharded checkpoint of params/opt_state/step + resume state.
 
         Each rank serializes only its addressable shards (no full-model
         gather); with ``config.async_save`` the device->host snapshot
         happens here and the file writes stream from a background thread
-        while training continues (``wait_checkpoints`` is the barrier)."""
+        while training continues (``wait_checkpoints`` is the barrier).
+
+        ``periodic=True`` registers the path for keep-last-k GC
+        (``EngineConfig(keep_ckpts=k)``): once more than k periodic
+        checkpoints exist, the oldest are deleted -- except the one the
+        ``best`` marker points at.  The GC list is handed to the writer,
+        which prunes only AFTER the new checkpoint is fully on disk."""
         c = self.config
+        block = (not c.async_save) if block is None else block
+        prune = []
+        if periodic:
+            self._ckpt_history.append(path)
+            if c.keep_ckpts > 0:
+                keep = set(self._ckpt_history[-c.keep_ckpts:])
+                if self.best_ckpt:
+                    keep.add(self.best_ckpt)
+                prune = [p for p in self._ckpt_history if p not in keep]
+                self._ckpt_history = [p for p in self._ckpt_history
+                                      if p not in prune]
+                # re-queue paths whose earlier prune never ran (a failed
+                # async write skips its prune) so GC'd dirs cannot leak
+                prune += [p for p in self._prune_backlog
+                          if p not in prune and p not in keep
+                          and os.path.isdir(p)]
+                self._prune_backlog = prune
         extra = {"arch": self.arch, "reduced": self.reduced,
                  "seed": c.seed, "steps": c.steps, "rollout": c.rollout,
                  "scheme": self.cfg.scheme,
-                 "pipeline": self.pipeline.state()}
-        block = (not c.async_save) if block is None else block
+                 "precision": self.policy.name,
+                 "pipeline": self.pipeline.state(),
+                 # GC/best state survives a resume: without it a restarted
+                 # run would re-mark a worse best and never prune the
+                 # pre-resume periodic checkpoints
+                 "best": {"val": (None if self.best_val == float("inf")
+                                  else self.best_val),
+                          "ckpt": self.best_ckpt},
+                 "ckpt_history": list(self._ckpt_history)}
         self.last_save = self._writer.save(
             path, {"params": self.params, "opt_state": self.opt_state},
-            step=self.step_idx, extra=extra, mesh=self.mesh, block=block)
+            step=self.step_idx, extra=extra, mesh=self.mesh, block=block,
+            prune=prune)
+
+    def _mark_best(self, val_loss: float) -> None:
+        """Track the best eval loss; point the ``<ckpt>-best.json`` marker
+        at the newest periodic checkpoint at-or-before the eval when it
+        improves.  The marker is honest about the misaligned-cadence case:
+        ``eval_step``/``val_loss`` describe the weights that were
+        evaluated, ``ckpt_step`` the (possibly earlier) checkpoint the
+        path refers to."""
+        if val_loss >= self.best_val:
+            return
+        self.best_val = float(val_loss)
+        if not (self.config.ckpt and self._ckpt_history):
+            return
+        self.best_ckpt = self._ckpt_history[-1]
+        suffix = self.best_ckpt.rsplit("-", 1)[-1]
+        import json
+        marker = {"path": self.best_ckpt, "val_loss": self.best_val,
+                  "eval_step": self.step_idx,
+                  "ckpt_step": int(suffix) if suffix.isdigit() else None}
+        with open(f"{self.config.ckpt}-best.json", "w") as f:
+            json.dump(marker, f, indent=1)
 
     def wait_checkpoints(self) -> None:
         """Barrier for in-flight checkpoint writes (re-raises their
@@ -299,6 +411,15 @@ class TrainEngine:
         if arch is not None and arch != self.arch:
             raise ValueError(f"resume {path!r}: checkpoint arch {arch!r} "
                              f"!= engine arch {self.arch!r}")
+        prec = man.extra.get("precision")
+        if prec is not None and prec != self.policy.name:
+            hint = ("omit --precision (the checkpoint predates the "
+                    "policy presets)" if prec == "legacy"
+                    else f"pass --precision {prec}")
+            raise ValueError(
+                f"resume {path!r}: checkpoint precision {prec!r} != engine "
+                f"policy {self.policy.name!r} -- param dtypes and the "
+                f"master-weight state would not line up; {hint}")
         params = ckpt.restore_tree(path, "params", like=self.params,
                                    mesh=self.mesh)
         opt = ckpt.restore_tree(path, "opt_state", like=self.opt_state,
@@ -310,6 +431,22 @@ class TrainEngine:
         self.step_idx = man.step
         self.pipeline.set_state(man.extra.get("pipeline",
                                               {"cursor": man.step}))
+        # best-marker state: the synchronously-written <ckpt>-best.json is
+        # authoritative (the manifest's copy can be one eval stale when
+        # the eval and ckpt cadences align); manifest extra is the
+        # fallback when this run has no --ckpt or the marker is gone
+        best = man.extra.get("best") or {}
+        marker_file = f"{c.ckpt}-best.json" if c.ckpt else None
+        if marker_file and os.path.exists(marker_file):
+            import json
+            with open(marker_file) as f:
+                m = json.load(f)
+            best = {"val": m.get("val_loss"), "ckpt": m.get("path")}
+        if best.get("val") is not None:
+            self.best_val = float(best["val"])
+            self.best_ckpt = best.get("ckpt")
+        self._ckpt_history = [p for p in man.extra.get("ckpt_history", [])
+                              if os.path.isdir(p)]
 
     # -- benchmarking ----------------------------------------------------
     def benchmark(self, steps: int = 10, warmup: int = 2) -> float:

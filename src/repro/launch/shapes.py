@@ -21,6 +21,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core import precision
 from repro.core.api import JigsawConfig
 from repro.core.sharding import RULES_1D, RULES_2D, ShardingRules
 from repro.launch import specs as S
@@ -73,9 +74,14 @@ def rules_for(cfg: ModelConfig) -> ShardingRules:
 
 
 def jigsaw_for(cfg: ModelConfig) -> JigsawConfig:
+    pol = precision.policy_of(cfg)
+    # legacy (no named policy): keep compute_dtype unset so the hot path
+    # is byte-for-byte what it was before the precision subsystem
+    cd = None if pol.name == "legacy" else pol.compute_dtype
     return JigsawConfig(rules=rules_for(cfg), scheme=cfg.scheme,
                         impl=cfg.impl, fsdp=cfg.shard_params_over_data,
-                        kernel=cfg.kernel)
+                        kernel=cfg.kernel, accum_dtype=pol.accum_dtype,
+                        compute_dtype=cd)
 
 
 def _sds(shape, dtype, mesh: Mesh, spec: P):
@@ -101,7 +107,8 @@ def opt_structs(params_structs, pspecs, cfg: ModelConfig, mesh: Mesh,
     shapes = jax.eval_shape(partial(adam.init, cfg=adam_cfg),
                             params_structs)
     ospecs = S.opt_specs(shapes["mu"], pspecs,
-                         zero1_axis="data" if zero1 else None, mesh=mesh)
+                         zero1_axis="data" if zero1 else None, mesh=mesh,
+                         master="master" in shapes)
     ospecs = S.sanitize_tree(shapes, ospecs, mesh)
     return jax.tree.map(
         lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,

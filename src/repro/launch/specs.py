@@ -108,8 +108,10 @@ def param_specs(params, cfg: ModelConfig, rules: ShardingRules,
 
 
 def opt_specs(moments, pspecs, zero1_axis: Optional[str] = None,
-              mesh: Optional[Mesh] = None):
+              mesh: Optional[Mesh] = None, master: bool = False):
     """Optimizer moments inherit parameter specs; step is replicated.
+    ``master=True`` adds the fp32 master-weight group (precision policy
+    ``bf16``, DESIGN.md §10), sharded exactly like the moments.
 
     ``moments`` is the parameter-shaped tree the moment specs are derived
     for (arrays or ShapeDtypeStructs -- only ``.shape`` is read, and only
@@ -155,7 +157,10 @@ def opt_specs(moments, pspecs, zero1_axis: Optional[str] = None,
     else:
         mspecs = jax.tree.map(lambda leaf, sp: z1(sp, leaf.shape),
                               moments, pspecs)
-    return {"step": P(), "mu": mspecs, "nu": mspecs}
+    out = {"step": P(), "mu": mspecs, "nu": mspecs}
+    if master:
+        out["master"] = mspecs
+    return out
 
 
 def batch_specs(cfg: ModelConfig, rules: ShardingRules):

@@ -34,9 +34,10 @@ from repro.launch.engine import EngineConfig, TrainEngine
 def train(arch: str, *, steps: int = 100, batch: int = 8, seq_len: int = 128,
           reduced: bool = True, mesh_model: int = 1, mesh_data: int = 1,
           scheme: str = None, impl: str = None, kernel: str = None,
-          rollout: int = 1,
+          precision: str = None, rollout: int = 1,
           lr: float = 1e-3, log_every: int = 10, ckpt: str = None,
-          ckpt_every: int = 0, resume: str = None, async_save: bool = True,
+          ckpt_every: int = 0, keep_ckpts: int = 0, resume: str = None,
+          async_save: bool = True,
           seed: int = 0, metrics_out: str = None, init_params=None,
           pipeline: str = "sharded", prefetch: int = 2, accum: int = 1,
           zero1: bool = False, eval_every: int = 0, config_override=None):
@@ -53,7 +54,8 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq_len: int = 128,
         config=EngineConfig(
             steps=steps, batch=batch, seq_len=seq_len, rollout=rollout,
             lr=lr, log_every=log_every, ckpt=ckpt, ckpt_every=ckpt_every,
-            resume=resume, async_save=async_save, seed=seed,
+            keep_ckpts=keep_ckpts, resume=resume, async_save=async_save,
+            seed=seed, precision=precision,
             metrics_out=metrics_out, pipeline=pipeline, prefetch=prefetch,
             accum=accum, zero1=zero1, eval_every=eval_every))
     history = engine.run()
@@ -77,6 +79,11 @@ def main():
     ap.add_argument("--kernel", default=None, choices=["xla", "pallas"],
                     help="local GEMM engine (pallas = MXU-tiled fused "
                          "kernels; interpret mode on CPU)")
+    ap.add_argument("--precision", default=None,
+                    choices=["fp32", "bf16", "bf16_pure"],
+                    help="precision policy (core/precision): bf16 = bf16 "
+                         "compute/comm + fp32 master weights; bf16_pure = "
+                         "bf16 everywhere (memory-minimal)")
     ap.add_argument("--rollout", type=int, default=1)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt", default=None,
@@ -84,6 +91,10 @@ def main():
                          "periodic saves land at <ckpt>-<step>")
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="save every N steps (0 = final only)")
+    ap.add_argument("--keep-ckpts", type=int, default=0,
+                    help="keep only the last K periodic checkpoints "
+                         "(0 = keep all; the best-eval marker's target "
+                         "is never deleted)")
     ap.add_argument("--resume", default=None,
                     help="checkpoint dir to exact-resume from (restores "
                          "params/opt/step/rollout schedule/data cursor)")
@@ -109,8 +120,9 @@ def main():
           seq_len=args.seq_len, reduced=not args.full,
           mesh_model=args.mesh_model, mesh_data=args.mesh_data,
           scheme=args.scheme, impl=args.impl, kernel=args.kernel,
-          rollout=args.rollout,
+          precision=args.precision, rollout=args.rollout,
           lr=args.lr, ckpt=args.ckpt, ckpt_every=args.ckpt_every,
+          keep_ckpts=args.keep_ckpts,
           resume=args.resume, async_save=not args.sync_save,
           seed=args.seed,
           metrics_out=args.metrics_out, pipeline=args.pipeline,

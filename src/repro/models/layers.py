@@ -20,6 +20,18 @@ import jax.numpy as jnp
 from repro.core.api import (DEFAULT_JIGSAW, JigsawConfig, linear_apply,
                             linear_init, mlp_apply, mlp_init)
 
+
+def boundary_cast(x: jax.Array, cfg: JigsawConfig) -> jax.Array:
+    """Cast a model-entry tensor (pipeline fields, frontend embeds) to the
+    policy compute dtype so the whole residual stream -- not just the GEMM
+    operands -- carries it (half the activation bytes under bf16).  The
+    norms below then keep it: they compute in f32 and cast back to
+    ``x.dtype``.  No-op when no compute dtype is set (legacy)."""
+    if cfg.compute_dtype is None:
+        return x
+    return x.astype(cfg.compute_dtype)
+
+
 # ---------------------------------------------------------------------------
 # Norms
 # ---------------------------------------------------------------------------

@@ -94,11 +94,13 @@ def _token_mix(bp, x, cfg: ModelConfig, jcfg: JigsawConfig):
     if jcfg.scheme == "2d":
         h = jigsaw.jigsaw_linear_2d_t(x, bp["tok_fc1"]["w"],
                                       bp["tok_fc1"]["b"], rules=jcfg.rules,
-                                      accum_dtype=jcfg.accum_dtype)
+                                      accum_dtype=jcfg.accum_dtype,
+                                      compute_dtype=jcfg.compute_dtype)
         h = jax.nn.gelu(h)
         return jigsaw.jigsaw_linear_2d_t(h, bp["tok_fc2"]["w"],
                                          bp["tok_fc2"]["b"], rules=jcfg.rules,
-                                         accum_dtype=jcfg.accum_dtype)
+                                         accum_dtype=jcfg.accum_dtype,
+                                         compute_dtype=jcfg.compute_dtype)
     # 1d / none: transpose so the contraction is over the last dim; under
     # scheme="1d" the swap flips which dim rides the model axis (an
     # all-to-all in SPMD -- the paper's distributed "transpose").
@@ -119,12 +121,14 @@ def _block_apply(bp, x, cfg: ModelConfig, jcfg: JigsawConfig):
         m = jigsaw.jigsaw_linear_2d(h, bp["ch_fc1"]["w"], bp["ch_fc1"]["b"],
                                     rules=jcfg.rules,
                                     accum_dtype=jcfg.accum_dtype,
-                                    kernel=jcfg.kernel)
+                                    kernel=jcfg.kernel,
+                                    compute_dtype=jcfg.compute_dtype)
         m = jax.nn.gelu(m)
         m = jigsaw.jigsaw_linear_2d(m, bp["ch_fc2"]["w"], bp["ch_fc2"]["b"],
                                     rules=jcfg.rules,
                                     accum_dtype=jcfg.accum_dtype,
-                                    kernel=jcfg.kernel)
+                                    kernel=jcfg.kernel,
+                                    compute_dtype=jcfg.compute_dtype)
     else:
         m = mlp_apply({"fc1": bp["ch_fc1"], "fc2": bp["ch_fc2"]}, h, jcfg)
     x = x + m
@@ -166,14 +170,18 @@ def apply(params, batch, cfg: ModelConfig,
     """
     xin = batch["fields"]
     p = cfg.wm_patch
-    x = patchify(xin, p)                                   # [B, T, p*p*C]
+    # block-boundary cast (precision policy): the pipeline ships f32
+    # fields; everything from the encoder GEMM to the decoder output --
+    # the whole residual stream -- runs in the compute dtype.
+    x = L.boundary_cast(patchify(xin, p), jcfg)            # [B, T, p*p*C]
     if jcfg.scheme == "2d":
         x = constrain(x, jcfg.rules.act(3, domain_dim=1))
         h = jigsaw.jigsaw_linear_2d(x, params["encoder"]["w"],
                                     params["encoder"]["b"],
                                     rules=jcfg.rules,
                                     accum_dtype=jcfg.accum_dtype,
-                                    kernel=jcfg.kernel)
+                                    kernel=jcfg.kernel,
+                                    compute_dtype=jcfg.compute_dtype)
     else:
         h = linear_apply(params["encoder"], x, jcfg)       # [B, T, d]
     h = processor(params, h, cfg, jcfg, rollout=rollout)
@@ -182,11 +190,15 @@ def apply(params, batch, cfg: ModelConfig,
                                     params["decoder"]["b"],
                                     rules=jcfg.rules,
                                     accum_dtype=jcfg.accum_dtype,
-                                    kernel=jcfg.kernel)
+                                    kernel=jcfg.kernel,
+                                    compute_dtype=jcfg.compute_dtype)
     else:
         y = linear_apply(params["decoder"], h, jcfg)       # [B, T, p*p*C]
     y = unpatchify(y, cfg.wm_lat, cfg.wm_lon, p, cfg.wm_channels)
     # learned per-variable blend between persistence (input) and prediction
+    # -- the exit boundary: blend in the INPUT dtype (f32) so the loss
+    # sees full-precision forecasts even under a bf16 compute policy.
+    y = y.astype(xin.dtype)
     lam = jax.nn.sigmoid(params["blend"]).astype(y.dtype)
     out = lam * xin + (1.0 - lam) * y
     return out, jnp.float32(0.0)

@@ -5,6 +5,14 @@ redundancy: "each GPU holds 1/n of the total parameters, optimizer states
 and input sample").  ``state_dtype`` lets the launcher trade moment
 precision for memory on the very large archs (DESIGN.md: jamba-398b
 training fits a single pod only with bf16 moments).
+
+Mixed precision (core/precision, DESIGN.md §10): with
+``master_weights=True`` the state carries an fp32 master copy of every
+parameter and fp32 moments; the update is computed entirely in fp32 from
+the masters and cast down into the (donated) ``param_dtype`` buffers.
+Without masters, a bf16 parameter stops moving once ``lr * delta`` drops
+below one bf16 ulp of its magnitude -- the masters are what make the
+``bf16`` policy converge like fp32 (``precision_bf16`` dist scenario).
 """
 from __future__ import annotations
 
@@ -23,17 +31,29 @@ class AdamConfig:
     weight_decay: float = 0.0
     state_dtype: Optional[str] = None    # None -> same as param dtype
     grad_clip: Optional[float] = 1.0     # global-norm clip (paper: 1.0)
+    master_weights: bool = False         # fp32 masters + fp32 moments
 
 
 def init(params, cfg: AdamConfig):
     def zeros_like(p):
-        dt = jnp.dtype(cfg.state_dtype) if cfg.state_dtype else p.dtype
+        if cfg.master_weights:
+            dt = jnp.float32                 # moments ride the masters' f32
+        else:
+            dt = jnp.dtype(cfg.state_dtype) if cfg.state_dtype else p.dtype
         return jnp.zeros(p.shape, dt)
-    return {
+    state = {
         "step": jnp.zeros((), jnp.int32),
         "mu": jax.tree.map(zeros_like, params),
         "nu": jax.tree.map(zeros_like, params),
     }
+    if cfg.master_weights:
+        # fp32 source of truth; ``update`` reads/writes these and only
+        # casts down into the param buffers the train step donates.
+        # copy=True: an already-f32 leaf (norm scales, blend) must NOT
+        # alias the param buffer -- the step donates both trees
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, jnp.float32, copy=True), params)
+    return state
 
 
 def global_norm(tree) -> jax.Array:
@@ -58,27 +78,35 @@ def update(params, grads, state, lr: jax.Array, cfg: AdamConfig
     b1, b2 = cfg.b1, cfg.b2
     c1 = 1.0 - b1 ** step.astype(jnp.float32)
     c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    masters = state.get("master")
 
-    def upd(p, g, mu, nu):
+    def upd(p, g, mu, nu, master):
         gf = g.astype(jnp.float32)
         mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * gf
         nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * gf * gf
         mhat = mu_n / c1
         vhat = nu_n / c2
         delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # fp32 base: the master when present, else the param itself
+        base = master if master is not None else p.astype(jnp.float32)
         if cfg.weight_decay:
-            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
-        p_n = p.astype(jnp.float32) - lr * delta
+            delta = delta + cfg.weight_decay * base
+        p_n = base - lr * delta
         return (p_n.astype(p.dtype), mu_n.astype(mu.dtype),
-                nu_n.astype(nu.dtype))
+                nu_n.astype(nu.dtype), p_n if master is not None else None)
 
     flat_p, tdef = jax.tree.flatten(params)
     flat_g = tdef.flatten_up_to(grads)
     flat_mu = tdef.flatten_up_to(state["mu"])
     flat_nu = tdef.flatten_up_to(state["nu"])
-    out = [upd(p, g, m, n) for p, g, m, n
-           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    flat_ma = (tdef.flatten_up_to(masters) if masters is not None
+               else [None] * len(flat_p))
+    out = [upd(p, g, m, n, ma) for p, g, m, n, ma
+           in zip(flat_p, flat_g, flat_mu, flat_nu, flat_ma)]
     new_p = tdef.unflatten([o[0] for o in out])
-    new_mu = tdef.unflatten([o[1] for o in out])
-    new_nu = tdef.unflatten([o[2] for o in out])
-    return new_p, {"step": step, "mu": new_mu, "nu": new_nu}
+    new_state = {"step": step,
+                 "mu": tdef.unflatten([o[1] for o in out]),
+                 "nu": tdef.unflatten([o[2] for o in out])}
+    if masters is not None:
+        new_state["master"] = tdef.unflatten([o[3] for o in out])
+    return new_p, new_state

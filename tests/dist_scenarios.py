@@ -212,6 +212,122 @@ def scenario_zero1_engine():
     check("zero1 moment spec carries the data axis", "data" in flat)
 
 
+def scenario_precision_bf16():
+    """Mixed-precision Jigsaw (ISSUE 5): the bf16 policy must (a) track
+    the fp32 loss trajectory on the same seed within bf16 tolerance,
+    (b) keep fp32 Adam master weights + moments while the donated params
+    are bf16, (c) HALVE the ring/`ring_chunked` per-hop wire bytes on
+    the lowered HLO, and (d) keep ring == ring_chunked bit-identical
+    under the bf16 wire/f32-accum cast points."""
+    import jax.numpy as jnp
+    from repro.core.api import JigsawConfig, linear_apply, mlp_apply, \
+        mlp_init
+    from repro.launch.analysis import collective_stats
+    from repro.launch.engine import EngineConfig, TrainEngine
+
+    # --- (a)+(b): engine A/B on a 4x2 mesh -----------------------------
+    def run(precision):
+        eng = TrainEngine(
+            "weathermixer-1b", mesh_model=4, mesh_data=2, scheme="1d",
+            impl="ring_chunked",
+            config=EngineConfig(steps=4, batch=4, log_every=1,
+                                precision=precision))
+        return eng.run(), eng
+
+    h32, e32 = run(None)
+    h16, e16 = run("bf16")
+    ok = all(np.allclose(a["loss"], b["loss"], rtol=5e-2, atol=5e-3)
+             for a, b in zip(h32, h16))
+    check("bf16 loss history ~= fp32 (same seed)", ok)
+    # losses must differ somewhere, or the bf16 path silently never ran
+    check("bf16 path actually engaged (histories not bit-equal)",
+          any(a["loss"] != b["loss"] for a, b in zip(h32, h16)))
+
+    w16 = e16.params["blocks"]["ch_fc1"]["w"]
+    check("params stored bf16", w16.dtype == jnp.bfloat16)
+    check("Adam master weights are fp32",
+          e16.opt_state["master"]["blocks"]["ch_fc1"]["w"].dtype
+          == jnp.float32)
+    check("Adam moments are fp32 under the bf16 policy",
+          e16.opt_state["mu"]["blocks"]["ch_fc1"]["w"].dtype == jnp.float32
+          and e16.opt_state["nu"]["blocks"]["ch_fc1"]["w"].dtype
+          == jnp.float32)
+    check("fp32 run has no master group", "master" not in e32.opt_state)
+
+    # satellite: engine-level param PartitionSpec pinning -- without
+    # zero1, params must still come back SHARDED (not GSPMD-replicated)
+    spec = w16.sharding.spec
+    flat = [a for e in spec if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))]
+    check("params pinned to jigsaw specs (model axis present, "
+          "non-zero1 run)", "model" in flat)
+
+    # --- (c): ring bytes halve on the lowered HLO ----------------------
+    mesh = make_host_mesh(model=4, data=1)
+    params = mlp_init(jax.random.PRNGKey(0), 64, 256, 64, bias=False)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 64))
+    for impl in ("ring", "ring_chunked"):
+        res = {}
+        for prec, cd in (("fp32", None), ("bf16", jnp.bfloat16)):
+            cfg = JigsawConfig(impl=impl, compute_dtype=cd)
+            with jax.set_mesh(mesh):
+                low = jax.jit(
+                    lambda p, v, c=cfg: mlp_apply(p, v, c)).lower(params, x)
+            st = collective_stats(
+                low.compiler_ir(dialect="hlo").as_hlo_text())
+            res[prec] = st.total_bytes
+        check(f"{impl}: bf16 wire bytes == 0.5x fp32 "
+              f"({res['bf16']:.0f} vs {res['fp32']:.0f})",
+              res["fp32"] > 0 and abs(res["bf16"] / res["fp32"] - 0.5)
+              < 1e-6)
+
+    # --- (d): bit-identity + accuracy of the bf16 ring -----------------
+    lparams = {"w": jax.random.normal(jax.random.PRNGKey(2), (128, 64))
+               * 0.1,
+               "b": jax.random.normal(jax.random.PRNGKey(3), (128,)) * 0.1}
+    ref = np.asarray(linear_apply(lparams, x, JigsawConfig(scheme="none")))
+    with jax.set_mesh(mesh):
+        outs = {}
+        for impl in ("ring", "ring_chunked", "rs"):
+            cfg = JigsawConfig(impl=impl, compute_dtype=jnp.bfloat16)
+            outs[impl] = np.asarray(
+                jax.jit(linear_apply, static_argnums=2)(lparams, x, cfg)
+                .astype(jnp.float32))
+        check("bf16 ring_chunked == ring bit-for-bit",
+              np.array_equal(outs["ring_chunked"], outs["ring"]))
+        check("bf16 ring ~= bf16 rs (wire rounding tolerance)",
+              np.allclose(outs["ring_chunked"], outs["rs"], rtol=2e-2,
+                          atol=2e-2))
+        check("bf16 ring ~= fp32 dense reference",
+              np.allclose(outs["ring_chunked"], ref, rtol=5e-2, atol=5e-2))
+
+    # composition: bf16 x ZeRO-1 -- the fp32 masters shard over data
+    # like the moments (3 fp32 trees / data-ways per rank)
+    engz = TrainEngine(
+        "weathermixer-1b", mesh_model=4, mesh_data=2, scheme="1d",
+        config=EngineConfig(steps=2, batch=4, log_every=1,
+                            precision="bf16", zero1=True))
+    hz = engz.run()
+    mspec = engz.opt_state["master"]["blocks"]["ch_fc1"]["w"].sharding.spec
+    mflat = [a for e in mspec if e is not None
+             for a in (e if isinstance(e, tuple) else (e,))]
+    check("bf16 x zero1: master weights sharded over data",
+          "data" in mflat)
+    check("bf16 x zero1: loss tracks the non-zero1 bf16 run",
+          np.allclose(hz[0]["loss"], h16[0]["loss"], rtol=1e-3))
+
+    # bf16_pure: memory-minimal -- bf16 moments, no masters
+    engp = TrainEngine(
+        "weathermixer-1b", mesh_model=4, mesh_data=2, scheme="1d",
+        config=EngineConfig(steps=2, batch=4, log_every=1,
+                            precision="bf16_pure"))
+    engp.run()
+    check("bf16_pure: no master group", "master" not in engp.opt_state)
+    check("bf16_pure: bf16 moments",
+          engp.opt_state["mu"]["blocks"]["ch_fc1"]["w"].dtype
+          == jnp.bfloat16)
+
+
 def scenario_ring_collectives():
     """Explicit ring reduce-scatter / allgather == native collectives."""
     mesh = make_host_mesh(model=8, data=2)

@@ -5,6 +5,7 @@ propagation), pipeline cursor state, and single-device exact resume.
 Multi-device save/reshard/resume runs as dist scenarios
 (``ckpt_sharded_reshard`` here via subprocess; ``resume_exact`` via
 test_distributed.py)."""
+import json
 import os
 import subprocess
 import sys
@@ -344,6 +345,66 @@ def test_engine_resume_rejects_schedule_mismatch(tmp_path):
         TrainEngine("internlm2-1.8b",
                     config=EngineConfig(steps=2, batch=2, seq_len=16,
                                         log_every=1, seed=1, resume=path))
+
+
+# -- keep-last-k GC + best marker (ISSUE 5 satellite) ------------------
+
+def test_keep_last_k_ckpt_gc(tmp_path):
+    """EngineConfig(keep_ckpts=2): only the newest 2 periodic checkpoint
+    dirs survive; the final (non-periodic) checkpoint is never GC'd."""
+    from repro.launch.engine import EngineConfig, TrainEngine
+    path = str(tmp_path / "ck")
+    eng = TrainEngine("weathermixer-1b", config=EngineConfig(
+        steps=7, batch=2, log_every=10, ckpt=path, ckpt_every=1,
+        keep_ckpts=2, async_save=False))
+    eng.run()
+    eng.wait_checkpoints()
+    have = sorted(p.name for p in tmp_path.iterdir())
+    # periodic saves land at ck-1..ck-6; only the last two survive
+    assert "ck-5" in have and "ck-6" in have
+    assert not any(f"ck-{i}" in have for i in range(1, 5)), have
+    assert "ck" in have                      # final save untouched
+    # survivors are complete, restorable checkpoints
+    from repro import checkpoint as ckpt
+    assert ckpt.load_manifest(str(tmp_path / "ck-6")).step == 7
+
+
+def test_ckpt_gc_spares_best_marker_target(tmp_path):
+    """The best-eval marker's checkpoint is exempt from GC."""
+    from repro.launch.engine import EngineConfig, TrainEngine
+    path = str(tmp_path / "ck")
+    eng = TrainEngine("weathermixer-1b", config=EngineConfig(
+        steps=8, batch=2, log_every=10, ckpt=path, ckpt_every=2,
+        keep_ckpts=1, eval_every=3, eval_batches=1, async_save=False))
+    eng.run()
+    eng.wait_checkpoints()
+    assert eng.best_ckpt is not None
+    assert os.path.exists(eng.best_ckpt), (eng.best_ckpt,
+                                           sorted(os.listdir(tmp_path)))
+    marker = json.load(open(path + "-best.json"))
+    assert marker["path"] == eng.best_ckpt
+    assert marker["val_loss"] == pytest.approx(eng.best_val)
+
+
+def test_writer_prunes_only_after_write(tmp_path):
+    """AsyncCheckpointWriter.save(prune=...) deletes the old dirs only
+    once the new checkpoint is durable (manifest present)."""
+    old = tmp_path / "old"
+    old.mkdir()
+    (old / "x").write_text("stale")
+    seen = {}
+
+    def slow_write(snap, path):
+        seen["old_alive_during_write"] = old.exists()
+        sharded.write_snapshot(snap, path)
+
+    w = AsyncCheckpointWriter(write_fn=slow_write)
+    w.save(str(tmp_path / "new"), {"g": {"a": np.arange(4)}},
+           prune=[str(old)])
+    w.wait()
+    assert seen["old_alive_during_write"]    # not pruned before
+    assert not old.exists()                  # pruned after
+    assert os.path.exists(tmp_path / "new" / "manifest.json")
 
 
 # -- multi-device: sharded save + resharded restore --------------------

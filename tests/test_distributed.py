@@ -27,6 +27,7 @@ SCENARIOS = [
     # checkpoint CI job needs it there; listing it here too would
     # double its cost in tier-1)
     "resume_exact",
+    "precision_bf16",
 ]
 
 

@@ -162,6 +162,121 @@ def test_weathermixer_pallas_forward_matches_xla():
 
 
 # ---------------------------------------------------------------------------
+# bf16 precision policy (ISSUE 5): pallas vs xla parity + resume roundtrip
+# ---------------------------------------------------------------------------
+
+BF16_XLA = JigsawConfig(scheme="none", kernel="xla",
+                        compute_dtype=jnp.bfloat16)
+BF16_PALLAS = JigsawConfig(scheme="none", kernel="pallas",
+                           compute_dtype=jnp.bfloat16)
+
+
+def test_matmul_bf16_fwd_matches_ref():
+    """bf16 pallas GEMM (fp32 MXU accumulation, 16-row sublane tiles)
+    matches the xla bf16 path within one-rounding tolerance."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = jax.random.normal(k1, (24, 72)).astype(jnp.bfloat16)
+    w = (jax.random.normal(k2, (56, 72)) * 0.05).astype(jnp.bfloat16)
+    b = (jax.random.normal(k3, (56,)) * 0.1).astype(jnp.bfloat16)
+    y = ops.matmul(x, w, b, epilogue="gelu")
+    assert y.dtype == jnp.bfloat16
+    r = ref.block_matmul_ref(x.astype(jnp.float32), w.astype(jnp.float32),
+                             b.astype(jnp.float32), "gelu")
+    np.testing.assert_allclose(np.asarray(y, dtype=np.float32),
+                               np.asarray(r), rtol=2e-2, atol=2e-2)
+
+
+def test_block_dims_bf16_sublane_tiling():
+    """bf16 GEMMs tile 16-row sublanes (f32: 8) -- the MXU constraint."""
+    bm, _, _ = ops.block_dims(20, 128, 128, block_m=256, block_n=256,
+                              block_k=512, dtype=jnp.bfloat16)
+    assert bm == 32          # round_up(20, 16), not round_up(20, 8)=24
+    bm8, _, _ = ops.block_dims(20, 128, 128, block_m=256, block_n=256,
+                               block_k=512, dtype=jnp.float32)
+    assert bm8 == 24
+
+
+def test_linear_apply_bf16_pallas_vs_xla_fwd_and_grad():
+    """bf16 policy through linear_apply: pallas == xla for forward AND
+    grads (the custom VJP casts grads back to the param dtype)."""
+    params = linear_init(KEY, 72, 56)
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 72)
+                          ).astype(jnp.bfloat16)
+
+    def loss(p, cfg):
+        return jnp.sum(linear_apply(p, x, cfg).astype(jnp.float32) ** 2)
+
+    vx, gx = jax.value_and_grad(loss)(params, BF16_XLA)
+    vp, gp = jax.value_and_grad(loss)(params, BF16_PALLAS)
+    assert gp["w"].dtype == jnp.bfloat16     # grads back in param dtype
+    np.testing.assert_allclose(float(vp), float(vx), rtol=2e-2)
+    gx32 = jax.tree.map(lambda a: np.asarray(a, dtype=np.float32), gx)
+    gp32 = jax.tree.map(lambda a: np.asarray(a, dtype=np.float32), gp)
+    assert _tree_close(gp32, gx32, rtol=5e-2, atol=5e-1)
+
+
+def test_mixer_mlp_bf16_fused_vs_unfused():
+    params = mlp_init(KEY, 64, 128, 64)
+    params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), params)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 24, 64)
+                          ).astype(jnp.bfloat16)
+    yp = mlp_apply(params, x, BF16_PALLAS)
+    yx = mlp_apply(params, x, BF16_XLA)
+    assert yp.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(yp, dtype=np.float32),
+                               np.asarray(yx, dtype=np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_bf16_policy_resume_roundtrip(tmp_path):
+    """A bf16-policy run checkpointed through the sharded writer resumes
+    exactly: params restored bf16, Adam master weights restored fp32,
+    and the continued loss history matches the uninterrupted run."""
+    from repro.launch.engine import EngineConfig, TrainEngine
+
+    path = str(tmp_path / "ck")
+
+    def engine(**kw):
+        return TrainEngine("weathermixer-1b", config=EngineConfig(
+            steps=4, batch=2, log_every=1, precision="bf16", **kw))
+
+    full = engine()
+    h_full = full.run()
+
+    interrupted = engine(ckpt=path, ckpt_every=2)
+    interrupted.run()
+    resumed = engine(resume=path + "-2")
+    assert resumed.step_idx == 3
+    assert resumed.params["encoder"]["w"].dtype == jnp.bfloat16
+    assert resumed.opt_state["master"]["encoder"]["w"].dtype == jnp.float32
+    assert resumed.opt_state["mu"]["encoder"]["w"].dtype == jnp.float32
+    # the bf16 params must equal the fp32 masters cast down (the masters
+    # are the source of truth the update writes through)
+    np.testing.assert_array_equal(
+        np.asarray(resumed.params["encoder"]["w"], dtype=np.float32),
+        np.asarray(resumed.opt_state["master"]["encoder"]["w"]
+                   .astype(jnp.bfloat16), dtype=np.float32))
+    h_res = resumed.run()
+    tail = [h for h in h_full if h["step"] >= 3]
+    assert len(h_res) == len(tail)
+    for a, b in zip(tail, h_res):
+        assert a["loss"] == b["loss"] and a["grad_norm"] == b["grad_norm"]
+
+
+def test_bf16_policy_resume_rejects_precision_mismatch(tmp_path):
+    from repro.launch.engine import EngineConfig, TrainEngine
+
+    path = str(tmp_path / "ck")
+    eng = TrainEngine("weathermixer-1b", config=EngineConfig(
+        steps=2, batch=2, log_every=1, precision="bf16", ckpt=path))
+    eng.run()
+    with pytest.raises(ValueError, match="precision"):
+        TrainEngine("weathermixer-1b", config=EngineConfig(
+            steps=2, batch=2, log_every=1, resume=path))
+
+
+# ---------------------------------------------------------------------------
 # distributed half: chunked-ring parity on a 16-device pseudo-mesh
 # ---------------------------------------------------------------------------
 
