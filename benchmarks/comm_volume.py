@@ -29,7 +29,8 @@ from repro.launch.analysis import collective_stats
 mesh = make_host_mesh(model=4, data=1)
 params = mlp_init(jax.random.PRNGKey(0), 512, 2048, 512, bias=False)
 x = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 512))
-for impl in ["rs", "ring", "ring_chunked", "allreduce", "gspmd"]:
+for impl in ["rs", "ring", "ring_chunked", "ring_fused", "allreduce",
+             "gspmd"]:
     cfg = JigsawConfig(impl=impl)
     with jax.set_mesh(mesh):
         comp = jax.jit(lambda p, v: mlp_apply(p, v, cfg)).lower(
@@ -38,7 +39,7 @@ for impl in ["rs", "ring", "ring_chunked", "allreduce", "gspmd"]:
     print(f"IMPL {impl} bytes {st.total_bytes:.0f} counts {st.counts}")
 
 # precision A/B on the unoptimized HLO: bf16 wire == 0.5x fp32 wire
-for impl in ["rs", "ring", "ring_chunked"]:
+for impl in ["rs", "ring", "ring_chunked", "ring_fused"]:
     res = {}
     for prec, cd in [("fp32", None), ("bf16", jnp.bfloat16)]:
         cfg = JigsawConfig(impl=impl, compute_dtype=cd)
@@ -84,19 +85,28 @@ def run():
                          f"fp32_bytes={parts[3]}|bf16_bytes={parts[5]}"
                          f"|ratio={parts[7]}"))
 
-    # chunked-ring per-hop accounting: same volume, overlap exposed.
-    # Shapes mirror the HLO experiment (fc1 of the MLP pair, p=4); the
-    # bf16 rows halve bytes_per_hop at the same flops_per_hop, doubling
-    # the per-hop overlap headroom.
+    # chunked/fused-ring per-hop accounting: same volume, overlap
+    # exposed (chunked) or enforced in-kernel (fused).  Shapes mirror the
+    # HLO experiment (fc1 of the MLP pair, p=4); the bf16 rows halve
+    # bytes_per_hop at the same flops_per_hop, doubling the per-hop
+    # overlap headroom.
     same = ("ring" in hlo_bytes and "ring_chunked" in hlo_bytes
             and hlo_bytes["ring"] == hlo_bytes["ring_chunked"])
     rows.append(("comm/ring_vs_chunked", 0,
                  f"hlo_bytes_equal={same}"))
+    # the fused kernel's CPU fallback lowers to the same chunk-granular
+    # ppermute hops: compiled collective bytes must match the ring's.
+    same_f = ("ring" in hlo_bytes and "ring_fused" in hlo_bytes
+              and hlo_bytes["ring"] == hlo_bytes["ring_fused"])
+    rows.append(("comm/ring_vs_fused", 0,
+                 f"hlo_bytes_equal={same_f}"))
+    assert same_f, ("ring_fused must move exactly the ring's bytes",
+                    hlo_bytes)
     for prec, dtype_bytes in (("fp32", 4), ("bf16", 2)):
-        for chunked in (False, True):
+        for impl in ("ring", "ring_chunked", "ring_fused"):
             cs = comm_schedule_jigsaw_1d(256, 2048, 512 // 4, 4,
                                          dtype_bytes=dtype_bytes,
-                                         chunked=chunked)
+                                         impl=impl)
             rows.append((f"comm/schedule/{cs.scheme}/{prec}", 0,
                          f"hops={cs.hops}"
                          f"|bytes_per_hop={cs.bytes_per_hop:.0f}"

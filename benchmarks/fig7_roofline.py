@@ -30,6 +30,17 @@ paper's "each hop's send overlaps the next chunk's compute".  Chunked
 rows appear only for the 2-way (1-D ring) case: the 4-way rows model
 scheme="2d" Cannon, which has no ring_chunked variant in code (its
 overlap is inherent to the skew/rotate schedule).
+
+ISSUE 6 extension: ``/fused`` rows model ``impl="ring_fused"`` -- the
+single-Pallas-kernel ring whose hops are in-kernel RDMA.  Its schedule
+is the SAME formula as ``/chunked`` (same bytes, same chunk GEMMs),
+which is the point: ring_fused does not change the roofline, it changes
+who enforces it.  ``/chunked`` reaches the bound only if XLA's async
+scheduler actually overlaps each ppermute with the next chunk GEMM
+(best-effort, fragile across XLA versions); ``/fused`` reaches it by
+construction, because the GEMM issues while the DMA is in flight inside
+one kernel.  Rows are tagged ``overlap=xla-best-effort`` vs
+``overlap=in-kernel`` to keep that distinction in the recorded table.
 """
 from benchmarks.common import emit
 
@@ -62,27 +73,33 @@ def run():
                 v = 3 * (comm_volume_jigsaw_2d(t_tokens, cfg.wm_d_ch, 2)
                          .bytes_per_device * 2 * cfg.n_layers)
                 t_coll, p_ring = v / A.ICI_BW, 2
-            scheds = [("", t_comp + t_coll)]
+            scheds = [("", t_comp + t_coll, "none")]
             if way == 2:
-                # chunked ring (1-D only): 1/p of the compute serializes,
-                # the rest overlaps the hops (see module docstring)
+                # chunked/fused ring (1-D only): 1/p of the compute
+                # serializes, the rest overlaps the hops (see module
+                # docstring).  Same formula for both -- fused differs in
+                # WHO enforces the overlap, not in the bound itself.
                 t_overlap = t_comp / p_ring + max(
                     t_comp * (p_ring - 1) / p_ring, t_coll)
-                scheds.append(("/chunked", t_overlap))
-            for tag, t_cc in scheds:
+                scheds.append(("/chunked", t_overlap, "xla-best-effort"))
+                scheds.append(("/fused", t_overlap, "in-kernel"))
+            for tag, t_cc, guar in scheds:
                 t_step = max(t_io, t_cc)
                 achieved = flops / t_step / way
                 frac = achieved / A.PEAK_FLOPS_BF16
                 regime = "io" if t_io > t_cc else "compute-comm"
+                extra = "" if guar == "none" else f"|overlap={guar}"
                 rows.append((f"fig7/model{num}/{way}way{tag}",
                              int(t_step * 1e6),
                              f"tflops_per_dev={achieved / 1e12:.1f}"
-                             f"|peak_frac={frac:.2f}|regime={regime}"))
+                             f"|peak_frac={frac:.2f}|regime={regime}"
+                             f"{extra}"))
     # headline claims
     rows.append(("fig7/claims", 0,
                  "small_models_io_bound+superscalar_domain_loading"
                  "|large_models_compute_bound"
-                 "|chunked_ring_hides_collectives_when_compute_bound"))
+                 "|chunked_ring_hides_collectives_when_compute_bound"
+                 "|fused_ring_enforces_that_overlap_in_kernel"))
     return rows
 
 

@@ -75,8 +75,8 @@ class ModelConfig:
                                            # legacy dtypes above, fp32 accum
     # --- parallelism defaults (overridable from the launcher) ---
     scheme: str = "1d"                     # jigsaw scheme: 1d|2d|none
-    impl: str = "rs"                       # 1d impl: ring|ring_chunked|rs|
-                                           #          gspmd|allreduce
+    impl: str = "rs"                       # 1d impl: ring|ring_chunked|
+                                           #   ring_fused|rs|gspmd|allreduce
     kernel: str = "xla"                    # local GEMM engine: xla|pallas
     shard_params_over_data: bool = False   # FSDP-hybrid for >~25B params
     remat: bool = True
@@ -130,8 +130,10 @@ class ModelConfig:
             param_dtype="float32", compute_dtype="float32", precision=None,
             scheme="none", remat=False, shard_params_over_data=False,
             # pallas on CPU is interpret-mode (slow): smoke tests opt in
-            # explicitly instead of inheriting the production default
-            kernel="xla",
+            # explicitly instead of inheriting the production default;
+            # impl resets with scheme (a 1-D impl under scheme="none"
+            # would trip the JigsawConfig ignored-impl warning)
+            kernel="xla", impl="rs",
         )
         if self.n_heads:
             kw["n_heads"] = min(self.n_heads, 4)

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Optional
 
 import jax
@@ -48,6 +49,26 @@ class JigsawConfig:
     # its operands here before the GEMM/collectives, so bf16 halves both
     # MXU time and per-hop ring bytes.  None = no cast (legacy).
     compute_dtype: Optional[jnp.dtype] = None
+
+    def __post_init__(self):
+        # Fail fast on unknown knobs and surface combinations that would
+        # otherwise be *silently* ignored (the scheme dispatch only reads
+        # ``impl`` under scheme="1d").
+        if self.scheme not in ("1d", "2d", "none"):
+            raise ValueError(f"JigsawConfig: unknown scheme {self.scheme!r}"
+                             " (expected '1d' | '2d' | 'none')")
+        if self.impl not in jigsaw.Impl1D:
+            raise ValueError(f"JigsawConfig: unknown impl {self.impl!r} "
+                             f"(expected one of {jigsaw.Impl1D})")
+        if self.kernel not in jigsaw.Kernels:
+            raise ValueError(f"JigsawConfig: unknown kernel {self.kernel!r}"
+                             f" (expected one of {jigsaw.Kernels})")
+        if self.scheme != "1d" and self.impl != "rs":
+            warnings.warn(
+                f"JigsawConfig: impl={self.impl!r} only applies to "
+                f"scheme='1d'; scheme={self.scheme!r} ignores it "
+                "(2-D uses Cannon, 'none' is undistributed)",
+                stacklevel=3)
 
     def replace(self, **kw) -> "JigsawConfig":
         return dataclasses.replace(self, **kw)

@@ -27,6 +27,15 @@ TPU/JAX adaptation (see DESIGN.md §2):
                   is issued immediately before hop j's ppermute, so every
                   hop's send can overlap the NEXT chunk's compute ("each
                   hop's send overlaps the next chunk's compute", §4).
+                  GEMMs and hops are still separate HLOs: overlap is
+                  XLA-best-effort.
+    - ``ring_fused`` : the same schedule as ONE pallas_call per ring
+                  (kernels/fused_ring.py): remote-DMA hops issued from
+                  inside the kernel while the next chunk's MXU GEMM runs
+                  -- overlap guaranteed by construction, not by the
+                  scheduler.  Deterministic chunk-granular fallback off
+                  TPU; bit-identical to ``ring`` (fwd + grads) under
+                  every precision policy.
     - ``rs``    : ``jax.lax.psum_scatter`` -- XLA's native reduce-scatter,
                   which lowers to the same ring on the ICI torus but lets
                   the compiler schedule the overlap.
@@ -61,7 +70,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import get_abstract_mesh, shard_map
 from repro.core.sharding import ShardingRules, constrain
 
-Impl1D = ("ring", "ring_chunked", "rs", "gspmd", "allreduce")
+Impl1D = ("ring", "ring_chunked", "ring_fused", "rs", "gspmd", "allreduce")
 Kernels = ("xla", "pallas")
 
 
@@ -214,12 +223,25 @@ def ring_matmul_chunked(x: jax.Array, w: jax.Array, *, axis_name: str,
 def jigsaw_matmul_1d(x: jax.Array, w: jax.Array, *, axis_name: str,
                      axis_size: int, impl: str = "rs",
                      accum_dtype: Optional[jnp.dtype] = jnp.float32,
-                     kernel: str = "xla") -> jax.Array:
+                     kernel: str = "xla",
+                     mesh_axes: Optional[Tuple[str, ...]] = None
+                     ) -> jax.Array:
     """Manual (inside-shard_map) 1-D Jigsaw matmul.
 
     x: local [..., d/p] block; w: local [m, d/p] block.
     Returns the local [..., m/p] block of ``X @ W.T``.
+    ``mesh_axes`` (mesh axis names, mesh order) is only consumed by the
+    ``ring_fused`` TPU kernel to address its ring neighbours.
     """
+    if impl == "ring_fused":
+        # One pallas_call per ring (kernels/fused_ring.py): the fused-hop
+        # schedule with in-kernel RDMA on TPU, chunk-granular fallback
+        # elsewhere.  Lazy import keeps core -> kernels one-way and cheap.
+        from repro.kernels import fused_ring
+        return fused_ring.fused_ring_matmul(
+            x, w, axis_name=axis_name, axis_size=axis_size,
+            accum_dtype=accum_dtype, kernel=kernel,
+            mesh_axes=mesh_axes).astype(x.dtype)
     if impl == "ring_chunked":
         return ring_matmul_chunked(
             x, w, axis_name=axis_name, axis_size=axis_size,
@@ -264,6 +286,38 @@ def _cast_operands(x, w, b, compute_dtype):
             None if b is None else b.astype(cd))
 
 
+def _gspmd_pallas_dot(x: jax.Array, w: jax.Array, mesh,
+                      rules: ShardingRules) -> jax.Array:
+    """Dense ``x @ w.T`` on the Pallas GEMM under GSPMD sharding.
+
+    Manual only over the batch axes (the model axes stay with GSPMD): at
+    the region boundary GSPMD allgathers x's channel shards / w's blocks,
+    the local GEMM runs ops.matmul_nd, and the caller's ``constrain``
+    re-shards the output.  Used by the gspmd / p==1 / uneven fallback so
+    ``kernel="pallas"`` is honoured there too.
+    """
+    from repro.kernels import ops
+    batch_axes = _present_batch_axes(mesh, rules)
+    dp = 1
+    for a in batch_axes:
+        dp *= mesh.shape[a]
+    shard_batch = (x.ndim >= 2 and dp > 1 and x.shape[0] % dp == 0)
+    if not shard_batch:
+        # no data axes in play (single device / replicated batch): the
+        # local GEMM IS the global GEMM.
+        return ops.matmul_nd(x, w, None, epilogue="none")
+    xdims: list = [None] * x.ndim
+    xdims[0] = batch_axes
+    xspec = P(*xdims)
+
+    def fn(xl, wl):
+        return ops.matmul_nd(xl, wl, None, epilogue="none")
+
+    return shard_map(fn, mesh=mesh, in_specs=(xspec, P(None, None)),
+                     out_specs=xspec, axis_names=set(batch_axes),
+                     check_vma=False)(x, w)
+
+
 def jigsaw_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
                   *, rules: ShardingRules, mesh=None, impl: str = "rs",
                   accum_dtype: Optional[jnp.dtype] = jnp.float32,
@@ -298,12 +352,19 @@ def jigsaw_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
     uneven = (x.shape[-1] % p != 0) or (w.shape[0] % p != 0) \
         or (w.shape[1] % p != 0)
     if impl == "gspmd" or p == 1 or uneven:
-        # GSPMD path stays on dot_general: a pallas_call is an opaque
-        # custom call GSPMD cannot partition, so the kernel knob only
-        # applies where we hold the local blocks (shard_map / no mesh).
-        y = jax.lax.dot_general(
-            x, w, (((x.ndim - 1,), (1,)), ((), ())),
-            preferred_element_type=accum_dtype or x.dtype).astype(x.dtype)
+        if kernel == "pallas":
+            # A pallas_call is an opaque custom call GSPMD cannot
+            # partition THROUGH, so the dense dot rides a shard_map that
+            # is manual over the batch axes only: GSPMD places the
+            # gather/reshard collectives at the region boundary and the
+            # local GEMM itself runs the MXU-tiled kernel -- the knob is
+            # honoured instead of silently ignored.
+            y = _gspmd_pallas_dot(x, w, mesh, rules)
+        else:
+            y = jax.lax.dot_general(
+                x, w, (((x.ndim - 1,), (1,)), ((), ())),
+                preferred_element_type=accum_dtype or x.dtype
+            ).astype(x.dtype)
         y = constrain(y, rules.act(y.ndim))
         if b is not None:
             y = y + b
@@ -340,7 +401,10 @@ def jigsaw_linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
             wl = jax.lax.all_gather(wl, fsdp_axis, axis=0, tiled=True)
         return jigsaw_matmul_1d(xl, wl, axis_name=tp, axis_size=p,
                                 impl=impl, accum_dtype=accum_dtype,
-                                kernel=kernel)
+                                kernel=kernel,
+                                mesh_axes=(tuple(mesh.axis_names)
+                                           if set(mesh.axis_names) <= manual
+                                           else None))
 
     # check_vma=False: with B=1 (long_500k) the batch stays replicated
     # and VMA inference cannot see through the FSDP all_gather; the
@@ -475,7 +539,9 @@ def jigsaw_linear_2d(x: jax.Array, w: jax.Array,
 
 def jigsaw_matmul_2d_t(x: jax.Array, w: jax.Array, *, dom_axis: str,
                        tp_axis: str, dom_size: int, tp_size: int,
-                       accum_dtype: Optional[jnp.dtype] = jnp.float32
+                       accum_dtype: Optional[jnp.dtype] = jnp.float32,
+                       kernel: str = "xla",
+                       mesh_axes: Optional[Tuple[str, ...]] = None
                        ) -> jax.Array:
     """Manual 2-D Jigsaw *transposed* matmul: ``Y = W @ X`` contracting
     X's second-to-last dim.  This is the paper's "transposed MLP" trick
@@ -491,6 +557,12 @@ def jigsaw_matmul_2d_t(x: jax.Array, w: jax.Array, *, dom_axis: str,
 
     Classic Cannon: skew W left by i along tp, skew X up by j along dom;
     q multiply-accumulate steps rotating W left / X up.
+
+    ``kernel="pallas"`` lowers each multiply-accumulate step to the fused
+    ``acc + w @ x`` MXU kernel (kernels/fused_ring.cannon_t_step; one
+    pallas_call per step, f32 VMEM accumulation) -- and, on TPU within
+    the VMEM budget, fuses the whole q-step loop into ONE pallas_call
+    with the rotate hops as in-kernel remote copies.
     """
     if dom_size != tp_size:
         raise ValueError(f"2-D Jigsaw needs a square grid, got "
@@ -498,6 +570,14 @@ def jigsaw_matmul_2d_t(x: jax.Array, w: jax.Array, *, dom_axis: str,
     q = tp_size
     i = jax.lax.axis_index(dom_axis)
     j = jax.lax.axis_index(tp_axis)
+
+    if kernel == "pallas":
+        from repro.kernels import fused_ring
+        wl = _skew(w, i, tp_axis, q)    # W(i, (j+i) % q)
+        xl = _skew(x, j, dom_axis, q)   # X((i+j) % q, j)
+        return fused_ring.fused_cannon_t(
+            wl, xl, dom_axis=dom_axis, tp_axis=tp_axis, q=q,
+            accum_dtype=accum_dtype, mesh_axes=mesh_axes)
 
     def mm(wb, xb):
         # wb: [m_l, t_l]; xb: [..., t_l, c_l] -> [..., m_l, c_l]
@@ -522,6 +602,7 @@ def jigsaw_linear_2d_t(x: jax.Array, w: jax.Array,
                        b: Optional[jax.Array] = None, *,
                        rules: ShardingRules, mesh=None,
                        accum_dtype: Optional[jnp.dtype] = jnp.float32,
+                       kernel: str = "xla",
                        compute_dtype: Optional[jnp.dtype] = None
                        ) -> jax.Array:
     """Public 2-D Jigsaw transposed linear: ``y[..., m, c] = w[m, t] @
@@ -531,6 +612,10 @@ def jigsaw_linear_2d_t(x: jax.Array, w: jax.Array,
       x: [..., t, c]  t on ``mdom``, c on ``mtp``
       w: [m, t]       m on ``mdom``, t on ``mtp``
       y: [..., m, c]  m on ``mdom``, c on ``mtp``  -- same as x: composable.
+
+    ``kernel="pallas"``: the Cannon multiply-accumulate steps run the
+    fused ``acc + w @ x`` MXU kernel (one pallas_call per step; the whole
+    loop when the TPU fused variant applies) instead of dot_general.
     """
     if not rules.is_2d:
         raise ValueError("jigsaw_linear_2d_t requires 2-D ShardingRules")
@@ -558,7 +643,9 @@ def jigsaw_linear_2d_t(x: jax.Array, w: jax.Array,
     manual = {dom, tp} | set(batch_axes)
 
     fn = partial(jigsaw_matmul_2d_t, dom_axis=dom, tp_axis=tp, dom_size=p,
-                 tp_size=q, accum_dtype=accum_dtype)
+                 tp_size=q, accum_dtype=accum_dtype, kernel=kernel,
+                 mesh_axes=(tuple(mesh.axis_names)
+                            if set(mesh.axis_names) <= manual else None))
     y = shard_map(fn, mesh=mesh, in_specs=(xspec, wspec),
                       out_specs=ospec, axis_names=manual,
                       check_vma=False)(x, w)
@@ -615,21 +702,37 @@ class CommSchedule:
 
 
 def comm_schedule_jigsaw_1d(tokens: int, m: int, d_local: int, p: int,
-                            dtype_bytes: int = 2, chunked: bool = True
-                            ) -> CommSchedule:
+                            dtype_bytes: int = 2, chunked: bool = True,
+                            impl: Optional[str] = None) -> CommSchedule:
     """Hop-level schedule of the explicit 1-D Jigsaw ring.
 
-    Both schedules move the same (p-1)/p * tokens * m bytes per device;
-    they differ only in what compute is still pending while each hop's
-    send is in flight (2 * tokens * d_local * m/p flops per output-chunk
-    GEMM for the chunked ring, none for the monolithic one).
+    All three schedules move the same (p-1)/p * tokens * m bytes per
+    device; they differ in what compute is still pending while each hop's
+    send is in flight:
+
+      ring         : nothing (the single GEMM finished before hop 0),
+      ring_chunked : one output-chunk GEMM (2 * tokens * d_local * m/p
+                     flops) -- *exposed to* XLA's scheduler, overlap
+                     best-effort,
+      ring_fused   : the same chunk GEMM plus the hop add (tokens * m/p
+                     VPU flops), executed *inside* the kernel while the
+                     RDMA flies -- overlap guaranteed by construction.
+
+    ``impl`` ("ring" | "ring_chunked" | "ring_fused") supersedes the
+    legacy ``chunked`` bool when given.
     """
+    if impl is None:
+        impl = "ring_chunked" if chunked else "ring"
+    if impl not in ("ring", "ring_chunked", "ring_fused"):
+        raise ValueError(f"comm_schedule_jigsaw_1d: unknown impl {impl!r}")
     hop_bytes = tokens * (m / p) * dtype_bytes
     chunk_flops = 2.0 * tokens * d_local * (m / p)
+    flops = {"ring": 0.0, "ring_chunked": chunk_flops,
+             "ring_fused": chunk_flops + tokens * (m / p)}[impl]
     return CommSchedule(
-        scheme="jigsaw-1d-" + ("ring_chunked" if chunked else "ring"),
+        scheme="jigsaw-1d-" + impl,
         hops=p - 1, bytes_per_hop=hop_bytes,
-        flops_per_hop=chunk_flops if chunked else 0.0,
+        flops_per_hop=flops,
         bytes_per_device=(p - 1) * hop_bytes)
 
 

@@ -202,8 +202,8 @@ def main():
                     help="every (arch x shape), single+multi pod")
     ap.add_argument("--scheme", default=None, choices=["1d", "2d", "none"])
     ap.add_argument("--impl", default=None,
-                    choices=["ring", "ring_chunked", "rs", "gspmd",
-                             "allreduce"])
+                    choices=["ring", "ring_chunked", "ring_fused", "rs",
+                             "gspmd", "allreduce"])
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--q-chunk", type=int, default=None,
                     help="chunked attention query-block size (beyond-paper)")

@@ -74,8 +74,8 @@ def main():
     ap.add_argument("--mesh-data", type=int, default=1)
     ap.add_argument("--scheme", default=None, choices=["1d", "2d", "none"])
     ap.add_argument("--impl", default=None,
-                    choices=["ring", "ring_chunked", "rs", "gspmd",
-                             "allreduce"])
+                    choices=["ring", "ring_chunked", "ring_fused", "rs",
+                             "gspmd", "allreduce"])
     ap.add_argument("--kernel", default=None, choices=["xla", "pallas"],
                     help="local GEMM engine (pallas = MXU-tiled fused "
                          "kernels; interpret mode on CPU)")

@@ -95,11 +95,13 @@ def _token_mix(bp, x, cfg: ModelConfig, jcfg: JigsawConfig):
         h = jigsaw.jigsaw_linear_2d_t(x, bp["tok_fc1"]["w"],
                                       bp["tok_fc1"]["b"], rules=jcfg.rules,
                                       accum_dtype=jcfg.accum_dtype,
+                                      kernel=jcfg.kernel,
                                       compute_dtype=jcfg.compute_dtype)
         h = jax.nn.gelu(h)
         return jigsaw.jigsaw_linear_2d_t(h, bp["tok_fc2"]["w"],
                                          bp["tok_fc2"]["b"], rules=jcfg.rules,
                                          accum_dtype=jcfg.accum_dtype,
+                                         kernel=jcfg.kernel,
                                          compute_dtype=jcfg.compute_dtype)
     # 1d / none: transpose so the contraction is over the last dim; under
     # scheme="1d" the swap flips which dim rides the model axis (an

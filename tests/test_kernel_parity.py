@@ -290,3 +290,145 @@ def test_ring_chunked_parity_pseudo_mesh():
         capture_output=True, text=True, timeout=600)
     assert res.returncode == 0 and "ALL-OK" in res.stdout, (
         f"\nstdout:\n{res.stdout[-3000:]}\nstderr:\n{res.stderr[-3000:]}")
+
+
+# ---------------------------------------------------------------------------
+# one-kernel ring (ISSUE 6): ring_fused == ring bit-identity + fused Cannon
+# ---------------------------------------------------------------------------
+
+def test_ring_fused_parity_pseudo_mesh():
+    """The acceptance criterion: ring_fused == ring bit-for-bit (fwd +
+    grads, fp32 and bf16, xla and pallas local GEMMs), the Pallas
+    transposed-Cannon parity, the VMEM guard, and a 2-step engine A/B --
+    see dist_scenarios.scenario_ring_fused_parity."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    env.pop("JAX_PLATFORMS", None)
+    script = os.path.join(os.path.dirname(__file__), "dist_scenarios.py")
+    res = subprocess.run(
+        [sys.executable, script, "ring_fused_parity"], env=env,
+        capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0 and "ALL-OK" in res.stdout, (
+        f"\nstdout:\n{res.stdout[-3000:]}\nstderr:\n{res.stderr[-3000:]}")
+
+
+def test_jigsaw_config_validation():
+    """Unknown knobs raise; silently-ignored combinations warn."""
+    import warnings
+
+    with pytest.raises(ValueError, match="scheme"):
+        JigsawConfig(scheme="3d")
+    with pytest.raises(ValueError, match="impl"):
+        JigsawConfig(impl="ring_fuzed")
+    with pytest.raises(ValueError, match="kernel"):
+        JigsawConfig(kernel="triton")
+    with pytest.warns(UserWarning, match="ignores"):
+        JigsawConfig(scheme="2d", impl="ring_fused")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # no spurious warnings
+        JigsawConfig(scheme="1d", impl="ring_fused", kernel="pallas")
+        JigsawConfig(scheme="2d")               # default impl: fine
+
+
+def test_fused_ring_p1_smoke():
+    """p=1 runs the fused op without any ring (no RDMA primitives are
+    even traced); forward and grads equal the dense GEMM on both local
+    engines."""
+    from repro.kernels import fused_ring
+
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (8, 24, 64))
+    w = jax.random.normal(k2, (48, 64)) * 0.05
+
+    def dense(xx, ww):
+        return jnp.sum(jnp.einsum("btd,md->btm", xx, ww) ** 2)
+
+    for kern in ("xla", "pallas"):
+        def fused(xx, ww):
+            y = fused_ring.fused_ring_matmul(
+                xx, ww, axis_name="model", axis_size=1, kernel=kern)
+            return jnp.sum(y ** 2)
+
+        v, g = jax.value_and_grad(fused, argnums=(0, 1))(x, w)
+        vr, gr = jax.value_and_grad(dense, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(float(v), float(vr), rtol=1e-4)
+        for a, b in zip(g, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-4)
+
+
+def test_cannon_t_step_parity():
+    """The fused multiply-accumulate step kernel (acc + w @ x, f32 VMEM
+    accumulation) matches the reference einsum for forward AND grads
+    (custom VJP: dw/dx ride the same blocked machinery)."""
+    from repro.kernels import fused_ring
+
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    w = jax.random.normal(k1, (20, 24)) * 0.1
+    x = jax.random.normal(k2, (3, 24, 40))
+    acc = jax.random.normal(k3, (3, 20, 40))
+
+    def f_pallas(ww, xx, aa):
+        return jnp.sum(fused_ring.cannon_t_step(ww, xx, aa) ** 2)
+
+    def f_ref(ww, xx, aa):
+        return jnp.sum((aa + jnp.einsum("mt,btc->bmc", ww, xx)) ** 2)
+
+    y = fused_ring.cannon_t_step(w, x, acc)
+    r = acc + jnp.einsum("mt,btc->bmc", w, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=2e-5,
+                               atol=2e-5)
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(w, x, acc)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(w, x, acc)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+    # None starts a fresh accumulator
+    y0 = fused_ring.cannon_t_step(w, x, None)
+    np.testing.assert_allclose(np.asarray(y0),
+                               np.asarray(jnp.einsum("mt,btc->bmc", w, x)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_fused_ring_vmem_guard_units():
+    """The budget guard's arithmetic: footprint scales with the chunk
+    tiles, and the backend parameterization keeps CPU on the fallback."""
+    from repro.kernels import fused_ring
+
+    small = fused_ring.ring_footprint_bytes(64, 64, 512, 8, jnp.float32,
+                                            jnp.float32)
+    big = fused_ring.ring_footprint_bytes(4096, 4096, 65536, 8,
+                                          jnp.float32, jnp.float32)
+    assert small < big
+    assert fused_ring.fits_vmem(64, 64, 512, 8, jnp.float32, jnp.float32)
+    assert not fused_ring.fits_vmem(4096, 4096, 65536, 8, jnp.float32,
+                                    jnp.float32)
+    # bf16 wire halves the ring-buffer bytes
+    bf = fused_ring.ring_footprint_bytes(64, 64, 512, 8, jnp.bfloat16,
+                                         jnp.float32)
+    assert bf < small
+
+
+def test_comm_schedule_fused_rows():
+    """ring_fused hides the hop add in-kernel: strictly more overlappable
+    flops per hop than ring_chunked at identical wire bytes."""
+    from repro.core import jigsaw
+
+    ring = jigsaw.comm_schedule_jigsaw_1d(4096, 4096, 512, 8, impl="ring")
+    chunked = jigsaw.comm_schedule_jigsaw_1d(4096, 4096, 512, 8,
+                                             impl="ring_chunked")
+    fused = jigsaw.comm_schedule_jigsaw_1d(4096, 4096, 512, 8,
+                                           impl="ring_fused")
+    assert ring.flops_per_hop == 0.0
+    assert fused.flops_per_hop > chunked.flops_per_hop > 0
+    assert fused.bytes_per_hop == chunked.bytes_per_hop == ring.bytes_per_hop
+    assert fused.bytes_per_device == chunked.bytes_per_device
+    assert fused.scheme == "jigsaw-1d-ring_fused"
+    r = fused.overlap_ratio(50e9, 197e12)
+    assert r >= chunked.overlap_ratio(50e9, 197e12)
+    # legacy bool still works
+    legacy = jigsaw.comm_schedule_jigsaw_1d(4096, 4096, 512, 8,
+                                            chunked=True)
+    assert legacy.scheme == "jigsaw-1d-ring_chunked"
+    with pytest.raises(ValueError, match="impl"):
+        jigsaw.comm_schedule_jigsaw_1d(4096, 4096, 512, 8, impl="rs")
