@@ -13,6 +13,12 @@ training through ``TrainEngine``:
 Absolute numbers on CPU are artifacts; the contribution is the ratio
 (steps+save)_async / (steps+save)_sync < 1 and the byte accounting.
 Writes results/ckpt_io.csv unless --tiny (CI smoke).
+
+``--preempt`` (ISSUE 7): measures the OTHER latency that matters for
+fault tolerance -- how long a SIGTERM'd process takes to produce a
+durable checkpoint (the final synchronous save of the preemption
+choreography, DESIGN.md §12).  The row is APPENDED to the csv so the
+sync/async rows need not be re-measured.
 """
 import argparse
 import os
@@ -69,6 +75,49 @@ print("NRANKS", eng.mesh.devices.size)
 """
 
 
+PREEMPT_CODE = """
+import os, tempfile
+from repro.configs.registry import get_config
+from repro.checkpoint import sharded
+from repro.launch import resilience
+from repro.launch.engine import EngineConfig, TrainEngine
+
+cfg = get_config("weathermixer-1b").reduced().replace(
+    scheme="1d", wm_lat={lat}, wm_lon={lon}, d_model={dm},
+    wm_d_tok={dtok}, wm_d_ch={dch})
+root = tempfile.mkdtemp()
+eng = TrainEngine("weathermixer-1b", reduced=False, config_override=cfg,
+                  mesh_model=4, mesh_data=2, scheme="1d",
+                  config=EngineConfig(steps=16, batch=4, zero1=True,
+                                      log_every=100,
+                                      ckpt=os.path.join(root, "ck"),
+                                      preempt_at_step=2))
+try:
+    eng.run()
+    raise SystemExit("expected a Preempted exit")
+except resilience.Preempted as p:
+    assert sharded.checkpoint_complete(p.checkpoint), p.checkpoint
+    print("FINALSAVES", eng.preempt_stats["final_save_s"])
+    print("TOTALBYTES", eng.last_save.total_bytes)
+    print("MAXRANKBYTES", max(eng.last_save.bytes_per_rank.values()))
+"""
+
+
+def run_preempt(tiny: bool = False):
+    lat, lon, dm, dtok, dch = ((32, 64, 64, 64, 64) if tiny
+                               else (96, 192, 256, 512, 512))
+    out = run_subprocess_devices(
+        PREEMPT_CODE.format(lat=lat, lon=lon, dm=dm, dtok=dtok, dch=dch),
+        n_devices=8)
+    vals = {l.split()[0]: float(l.split()[1])
+            for l in out.splitlines() if l and l.split()[0].isupper()}
+    total, maxr = int(vals["TOTALBYTES"]), int(vals["MAXRANKBYTES"])
+    return [
+        ("ckpt/preempt_final_save", int(vals["FINALSAVES"] * 1e6),
+         f"sigterm_to_durable|bytes={total}|max_rank={maxr}"),
+    ]
+
+
 def run(tiny: bool = False):
     lat, lon, dm, dtok, dch = ((32, 64, 64, 64, 64) if tiny
                                else (96, 192, 256, 512, 512))
@@ -97,13 +146,19 @@ def main():
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: small grid, no results/ write")
     ap.add_argument("--no-write", action="store_true")
+    ap.add_argument("--preempt", action="store_true",
+                    help="measure only the SIGTERM->durable final-save "
+                         "latency; the row is appended to the csv")
     ap.add_argument("--out", default=RESULTS)
     args = ap.parse_args()
-    rows = run(tiny=args.tiny)
+    rows = run_preempt(tiny=args.tiny) if args.preempt else run(tiny=args.tiny)
     emit(rows)
     if not args.tiny and not args.no_write:
-        with open(args.out, "w") as f:
-            f.write("name,us_per_call,derived\n")
+        mode = "a" if args.preempt else "w"
+        header = not (args.preempt and os.path.exists(args.out))
+        with open(args.out, mode) as f:
+            if header:
+                f.write("name,us_per_call,derived\n")
             for r in rows:
                 f.write(",".join(str(x) for x in r) + "\n")
         print(f"[ckpt_io] wrote {args.out}")

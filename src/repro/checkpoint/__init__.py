@@ -9,8 +9,13 @@
 * ``io``        -- the legacy (path, params, opt_state, step) facade.
 """
 from repro.checkpoint.io import restore, save  # noqa: F401
-from repro.checkpoint.manifest import Manifest, load_manifest  # noqa: F401
-from repro.checkpoint.sharded import (restore_checkpoint,  # noqa: F401
+from repro.checkpoint.manifest import (Manifest, load_manifest,  # noqa: F401
+                                       merge_manifests)
+from repro.checkpoint.sharded import (checkpoint_complete,  # noqa: F401
+                                      finalize_checkpoint,
+                                      latest_checkpoint,
+                                      partition_snapshot,
+                                      restore_checkpoint,
                                       restore_tree, save_checkpoint,
                                       snapshot, write_snapshot)
 from repro.checkpoint.writer import AsyncCheckpointWriter  # noqa: F401

@@ -28,7 +28,15 @@ import numpy as np
 
 FORMAT = "jigsaw-ckpt-v1"
 MANIFEST_NAME = "manifest.json"
+INDEX_PREFIX = "index-p"
 SEP = "/"
+
+
+def index_name(process_index: int) -> str:
+    """Per-process shard index file: each process of a pod-scale save
+    publishes one of these (atomically, after its shard files are on
+    disk); process 0 merges them into the final ``manifest.json``."""
+    return f"{INDEX_PREFIX}{process_index:05d}.json"
 
 Bounds = Tuple[Tuple[int, int], ...]
 
@@ -170,14 +178,35 @@ class Manifest:
                         for k, e in leaves.items()}
                     for g, leaves in d["groups"].items()})
 
+    def shard_files(self):
+        """The set of shard files this manifest references -- what must
+        exist on disk for the checkpoint to be complete."""
+        return {s.file for leaves in self.groups.values()
+                for e in leaves.values() for s in e.shards}
+
     def save(self, path: str) -> None:
         """Write manifest.json atomically (tmp + rename): shard files are
         written FIRST, the manifest LAST, so a crashed save is never
         mistaken for a complete checkpoint."""
-        tmp = os.path.join(path, MANIFEST_NAME + ".tmp")
+        self._dump_json(self.to_json(), path, MANIFEST_NAME)
+
+    def save_index(self, path: str, process_index: int,
+                   process_count: int) -> None:
+        """Write this process's shard-index fragment (same schema as the
+        manifest, shard lists restricted to what THIS process wrote),
+        atomically, as the per-process completeness marker of a
+        pod-scale save."""
+        d = self.to_json()
+        d["process"] = {"index": int(process_index),
+                        "count": int(process_count)}
+        self._dump_json(d, path, index_name(process_index))
+
+    @staticmethod
+    def _dump_json(d: dict, path: str, name: str) -> None:
+        tmp = os.path.join(path, name + ".tmp")
         with open(tmp, "w") as f:
-            json.dump(self.to_json(), f, indent=1)
-        os.replace(tmp, os.path.join(path, MANIFEST_NAME))
+            json.dump(d, f, indent=1)
+        os.replace(tmp, os.path.join(path, name))
 
 
 def load_manifest(path: str) -> Manifest:
@@ -188,6 +217,65 @@ def load_manifest(path: str) -> Manifest:
             f"checkpoint (or an interrupted save)")
     with open(fname) as f:
         return Manifest.from_json(json.load(f))
+
+
+def load_index(path: str, process_index: int) -> Manifest:
+    fname = os.path.join(path, index_name(process_index))
+    with open(fname) as f:
+        d = json.load(f)
+    d.pop("process", None)
+    return Manifest.from_json(d)
+
+
+def merge_manifests(parts: Sequence[Manifest]) -> Manifest:
+    """Merge per-process manifest fragments into the global manifest.
+
+    Every fragment carries the SAME leaf set with the same global
+    shape/dtype/spec (each process describes the whole pytree, shard
+    lists restricted to what it wrote); the merge concatenates the shard
+    lists, deduplicating identical ``(file, key)`` entries.  Coverage of
+    the merged shard set is validated at restore time by the reader's
+    boolean fill mask, so a fragment that silently lost shards still
+    fails loudly."""
+    if not parts:
+        raise ValueError("merge_manifests: no fragments")
+    base = parts[0]
+    for i, p in enumerate(parts[1:], 1):
+        if set(p.groups) != set(base.groups):
+            raise ValueError(
+                f"per-process index {i} disagrees on the group set: "
+                f"{sorted(p.groups)} != {sorted(base.groups)}")
+        if p.step != base.step:
+            raise ValueError(
+                f"per-process index {i} is from step {p.step}, "
+                f"rank 0's from {base.step} -- torn pod save")
+    groups: Dict[str, Dict[str, LeafEntry]] = {}
+    for g, leaves in base.groups.items():
+        out: Dict[str, LeafEntry] = {}
+        for k, e in leaves.items():
+            shards: List[ShardEntry] = []
+            seen = set()
+            for i, p in enumerate(parts):
+                pe = p.groups[g].get(k)
+                if pe is None:
+                    raise ValueError(
+                        f"{g}[{SEP}{k}]: missing from per-process "
+                        f"index {i}")
+                if (pe.shape, pe.dtype) != (e.shape, e.dtype):
+                    raise ValueError(
+                        f"{g}[{SEP}{k}]: fragment {i} disagrees on "
+                        f"shape/dtype ({pe.shape}/{pe.dtype} != "
+                        f"{e.shape}/{e.dtype})")
+                for s in pe.shards:
+                    sid = (s.file, s.key)
+                    if sid not in seen:
+                        seen.add(sid)
+                        shards.append(s)
+            out[k] = LeafEntry(e.shape, e.dtype, e.spec, tuple(shards))
+        groups[g] = out
+    return Manifest(step=base.step, extra=base.extra,
+                    mesh_axes=base.mesh_axes, mesh_shape=base.mesh_shape,
+                    groups=groups)
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -127,15 +128,95 @@ def snapshot(groups: Dict[str, Any], *, step: int = 0,
     return Snapshot(man, blobs, bytes_per_rank)
 
 
-def write_snapshot(snap: Snapshot, path: str) -> None:
-    """Stream a Snapshot to disk: shard files first, manifest last (the
-    manifest's presence marks the checkpoint complete)."""
-    os.makedirs(path, exist_ok=True)
-    for fname, members in snap.blobs.items():
+def _write_npz_atomic(fname: str, members: Dict[str, np.ndarray]) -> None:
+    """Write an npz via tmp + os.replace: a process killed mid-write can
+    leave a stale ``.tmp`` behind, but never a truncated shard at the
+    final name -- so 'file exists' means 'file is whole'."""
+    tmp = fname + ".tmp"
+    # an open file object sidesteps np.savez's extension munging AND
+    # makes the write target explicit
+    with open(tmp, "wb") as f:
         # uncompressed: the async writer's job is to get off the train
         # loop's critical path, not to spend CPU on gzip
-        np.savez(os.path.join(path, fname), **members)
-    snap.manifest.save(path)
+        np.savez(f, **members)
+    os.replace(tmp, fname)
+
+
+def write_snapshot(snap: Snapshot, path: str, *, process_index: int = 0,
+                   process_count: int = 1) -> None:
+    """Stream a Snapshot to disk: shard files first (each atomically),
+    manifest last (its presence marks the checkpoint complete).
+
+    Pod-scale (``process_count > 1``): every process writes its shard
+    files then publishes an ``index-pNNNNN.json`` fragment; process 0
+    additionally waits for ALL fragments and merges them into the final
+    ``manifest.json`` -- the save is atomic as a whole, not per process
+    (a pod save missing any rank's index never grows a manifest, so
+    ``latest_checkpoint`` never resumes from it)."""
+    os.makedirs(path, exist_ok=True)
+    for fname, members in snap.blobs.items():
+        _write_npz_atomic(os.path.join(path, fname), members)
+    if process_count <= 1:
+        snap.manifest.save(path)
+        return
+    snap.manifest.save_index(path, process_index, process_count)
+    if process_index == 0:
+        finalize_checkpoint(path, process_count)
+
+
+def finalize_checkpoint(path: str, process_count: int, *,
+                        timeout: float = 120.0,
+                        poll: float = 0.05) -> Manifest:
+    """Rank 0's merge barrier: wait for every per-process index file,
+    merge the fragments, write the global manifest (atomically).  Raises
+    ``TimeoutError`` naming the missing ranks if the pod save never
+    completes -- the manifest is then never written and the directory
+    stays invisible to ``latest_checkpoint``."""
+    names = [MF.index_name(i) for i in range(process_count)]
+    deadline = time.monotonic() + timeout
+    while True:
+        missing = [n for n in names
+                   if not os.path.exists(os.path.join(path, n))]
+        if not missing:
+            break
+        if time.monotonic() > deadline:
+            raise TimeoutError(
+                f"checkpoint {path!r}: per-process index files "
+                f"{missing} still missing after {timeout}s -- pod save "
+                f"incomplete, manifest NOT written")
+        time.sleep(poll)
+    man = MF.merge_manifests(
+        [MF.load_index(path, i) for i in range(process_count)])
+    man.save(path)
+    return man
+
+
+def partition_snapshot(snap: Snapshot, assign: Dict[int, int]
+                       ) -> Dict[int, Snapshot]:
+    """Split a single-process Snapshot into per-process fragments by
+    writing device (``assign``: device id -> process index) -- the
+    fragment shapes a real multi-host save produces natively, used by
+    the emulated pod-save tests.  Every fragment describes the WHOLE
+    leaf set (global shapes/specs) with only its own shard entries."""
+    out: Dict[int, Snapshot] = {}
+    for pi in sorted(set(assign.values())):
+        groups: Dict[str, Dict[str, LeafEntry]] = {}
+        for g, leaves in snap.manifest.groups.items():
+            groups[g] = {
+                k: LeafEntry(e.shape, e.dtype, e.spec,
+                             tuple(s for s in e.shards
+                                   if assign[s.device] == pi))
+                for k, e in leaves.items()}
+        man = Manifest(step=snap.manifest.step,
+                       extra=dict(snap.manifest.extra),
+                       mesh_axes=snap.manifest.mesh_axes,
+                       mesh_shape=snap.manifest.mesh_shape, groups=groups)
+        files = man.shard_files()
+        out[pi] = Snapshot(
+            man, {f: snap.blobs[f] for f in files},
+            {d: b for d, b in snap.bytes_per_rank.items()
+             if assign.get(d) == pi})
+    return out
 
 
 def save_checkpoint(path: str, groups: Dict[str, Any], *, step: int = 0,
@@ -280,3 +361,55 @@ def restore_checkpoint(path: str, like_groups: Optional[Dict[str, Any]]
                               specs=specs.get(g), manifest=man, reader=rd)
               for g in man.groups}
     return groups, man.step, man.extra
+
+
+# ---------------------------------------------------------------------------
+# Completeness + discovery (the auto-resume contract, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def checkpoint_complete(path: str) -> bool:
+    """True iff ``path`` holds a FINISHED sharded checkpoint: the
+    manifest is present and parsable and every shard file it references
+    exists.  A save killed mid-flight fails one of these -- shard files
+    land atomically (tmp + replace) and the manifest is written last, so
+    there is no window where a torn save looks whole."""
+    try:
+        man = load_manifest(path)
+    except Exception:
+        return False
+    return all(os.path.exists(os.path.join(path, f))
+               for f in man.shard_files())
+
+
+def latest_checkpoint(root: str, prefix: Optional[str] = None
+                      ) -> Optional[str]:
+    """The newest COMPLETE checkpoint under ``root`` (or ``root``
+    itself, if it is one), by manifest step then manifest mtime; torn
+    saves -- missing manifest, orphaned index fragments, missing shard
+    files -- are skipped, never selected.  ``prefix`` restricts
+    discovery to ``<prefix>`` / ``<prefix>-*`` entries (the engine's
+    ``--ckpt out/ck`` layout).  Returns None when nothing complete
+    exists (cold start)."""
+    if not os.path.isdir(root):
+        return None
+    cands = []
+    for name in sorted(os.listdir(root)):
+        p = os.path.join(root, name)
+        if not os.path.isdir(p):
+            continue
+        if prefix is not None and name != prefix \
+                and not name.startswith(prefix + "-"):
+            continue
+        cands.append(p)
+    if os.path.exists(os.path.join(root, MF.MANIFEST_NAME)):
+        cands.append(root)
+    best, best_key = None, None
+    for p in cands:
+        if not checkpoint_complete(p):
+            continue
+        man = load_manifest(p)
+        key = (man.step,
+               os.path.getmtime(os.path.join(p, MF.MANIFEST_NAME)))
+        if best_key is None or key > best_key:
+            best, best_key = p, key
+    return best

@@ -18,12 +18,18 @@ Guards:
   * ``wait()`` is the barrier -- it joins the worker and re-raises any
     write error on the caller's thread (a failed checkpoint must not be
     silent);
+  * transient ``OSError``s (an NFS blip, a full-but-draining disk) are
+    retried with jittered exponential backoff (``retries`` attempts,
+    DESIGN.md §12) before the error is surfaced at all -- a preemption
+    save should not die on the first EIO of a node being reclaimed;
   * the writer is reusable after ``wait()``.
 """
 from __future__ import annotations
 
+import random
 import shutil
 import threading
+import time
 from typing import Any, Callable, Dict, List, Optional
 
 from jax.sharding import Mesh
@@ -36,14 +42,19 @@ class AsyncCheckpointWriter:
 
     ``write_fn(snapshot, path)`` defaults to ``sharded.write_snapshot``
     and is injectable for tests (e.g. a slowed writer to assert the
-    train loop genuinely overlaps the write).
+    train loop genuinely overlaps the write).  ``retries``/
+    ``retry_backoff`` bound the transient-``OSError`` retry loop
+    (attempts total; backoff doubles per attempt, with jitter).
     """
 
-    def __init__(self, write_fn: Optional[Callable] = None):
+    def __init__(self, write_fn: Optional[Callable] = None, *,
+                 retries: int = 3, retry_backoff: float = 0.25):
         self._write_fn = write_fn or sharded.write_snapshot
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self._lock = threading.Lock()
+        self.retries = max(1, int(retries))
+        self.retry_backoff = retry_backoff
         self.saves = 0            # completed + in-flight submissions
 
     # -- state ----------------------------------------------------------
@@ -70,11 +81,32 @@ class AsyncCheckpointWriter:
             err, self._error = self._error, None
             raise err
 
+    # -- the write itself ------------------------------------------------
+    def _write_with_retry(self, snap: sharded.Snapshot, path: str,
+                          kwargs: dict) -> None:
+        """Run write_fn; retry transient OSErrors with jittered
+        exponential backoff before re-raising (non-OSError failures are
+        bugs, not weather -- they surface immediately)."""
+        for attempt in range(1, self.retries + 1):
+            try:
+                return self._write_fn(snap, path, **kwargs)
+            except OSError as e:
+                if attempt >= self.retries:
+                    raise
+                delay = (self.retry_backoff * (2 ** (attempt - 1))
+                         * (1.0 + random.random()))
+                print(f"[ckpt] transient write error on {path!r} "
+                      f"(attempt {attempt}/{self.retries}): {e!r}; "
+                      f"retrying in {delay:.2f}s")
+                time.sleep(delay)
+
     # -- submission -----------------------------------------------------
     def save(self, path: str, groups: Dict[str, Any], *, step: int = 0,
              extra: Optional[dict] = None, mesh: Optional[Mesh] = None,
              block: bool = False,
-             prune: Optional[List[str]] = None) -> sharded.Snapshot:
+             prune: Optional[List[str]] = None,
+             process_index: int = 0,
+             process_count: int = 1) -> sharded.Snapshot:
         """Snapshot ``groups`` now; write them in the background.
 
         Returns the Snapshot (its ``bytes_per_rank`` is the per-rank
@@ -85,21 +117,29 @@ class AsyncCheckpointWriter:
         ``prune`` lists older checkpoint directories to delete (the
         engine's keep-last-k GC) -- removed only AFTER this save's files
         are fully on disk, so an interrupted write never leaves the run
-        with fewer durable checkpoints than before."""
+        with fewer durable checkpoints than before.
+
+        ``process_index``/``process_count`` select the pod-scale write
+        path (per-process shard index + rank-0 manifest merge,
+        ``sharded.write_snapshot``); the defaults are the single-process
+        behavior."""
         prune = list(prune or [])
+        kwargs = ({} if process_count <= 1
+                  else {"process_index": process_index,
+                        "process_count": process_count})
         with self._lock:
             self._wait_locked()               # in-flight guard
             snap = sharded.snapshot(groups, step=step, extra=extra,
                                     mesh=mesh)
             self.saves += 1
             if block:
-                self._write_fn(snap, path)
+                self._write_with_retry(snap, path, kwargs)
                 self._prune(prune)
                 return snap
 
             def work():
                 try:
-                    self._write_fn(snap, path)
+                    self._write_with_retry(snap, path, kwargs)
                     self._prune(prune)
                 except BaseException as e:    # surfaced at next wait()
                     self._error = e

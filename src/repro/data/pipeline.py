@@ -261,6 +261,12 @@ class InputPipeline:
         # step so the cursor IS the full pipeline state)
         self.cursor = 0
         self._plans: Dict[str, _ReadPlan] = {}
+        # live prefetch machinery of the most recent iterate() (for
+        # stop(): a preempting process must be able to cancel the worker
+        # without waiting out the full horizon)
+        self._queue: Optional["queue.Queue"] = None
+        self._stop_event: Optional[threading.Event] = None
+        self._thread: Optional[threading.Thread] = None
 
     # -- host-side ------------------------------------------------------
     def host_batch(self, step: int, horizon: int = 1
@@ -361,13 +367,22 @@ class InputPipeline:
                 for i in range(n):
                     if stop.is_set():
                         return
-                    q.put((self.get(start_step + i, int(horizons[i])),
-                           None))
+                    batch = self.get(start_step + i, int(horizons[i]))
+                    while not stop.is_set():
+                        # bounded put: never blocks forever against a
+                        # consumer that has already given up (stop()
+                        # from a preempting process)
+                        try:
+                            q.put((batch, None), timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
             except BaseException as e:       # surfaced on the consumer
                 q.put((None, e))
 
         t = threading.Thread(target=worker, name="input-pipeline",
                              daemon=True)
+        self._queue, self._stop_event, self._thread = q, stop, t
         t.start()
         try:
             for i in range(n):
@@ -377,13 +392,30 @@ class InputPipeline:
                 self.cursor = start_step + i + 1
                 yield batch
         finally:
-            stop.set()
-            while True:                      # unblock a producer in put()
-                try:
-                    q.get_nowait()
-                except queue.Empty:
-                    break
-            t.join(timeout=10)
+            self.stop()
+
+    def stop(self, timeout: float = 5.0) -> bool:
+        """Cancel the prefetch worker: set its stop flag, drain the
+        queue so a blocked ``put`` wakes up, and join with ``timeout``.
+        Returns True when the thread is down (always safe to call --
+        idempotent, and a no-op when prefetch is disabled).  The worker
+        is a daemon, so even a join timeout (it only happens mid-
+        ``get()``, i.e. mid batch generation) cannot hang process exit
+        -- the preemption path needs bounded shutdown latency."""
+        t, q, stop = self._thread, self._queue, self._stop_event
+        if t is None:
+            return True
+        stop.set()
+        while True:                          # unblock a producer in put()
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                break
+        t.join(timeout=timeout)
+        alive = t.is_alive()
+        if not alive:
+            self._queue = self._stop_event = self._thread = None
+        return not alive
 
     # -- modeled I/O -----------------------------------------------------
     def io_bytes_per_rank(self, n_ranks: int) -> int:

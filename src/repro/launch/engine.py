@@ -79,6 +79,9 @@ class EngineConfig:
     pipeline: str = "sharded"  # "sharded" | "sync-full"
     prefetch: int = 2          # 0 disables the background thread
     metrics_out: Optional[str] = None
+    preemption: bool = False   # SIGTERM/SIGUSR1 -> final save + Preempted
+    preempt_at_step: Optional[int] = None  # chaos hook: self-SIGTERM
+                               # after this step (or REPRO_PREEMPT_AT_STEP)
 
 
 class TrainEngine:
@@ -206,6 +209,8 @@ class TrainEngine:
         self.last_save = None      # Snapshot of the most recent save
         self._ckpt_history: List[str] = []   # periodic dirs, oldest first
         self._prune_backlog: List[str] = []  # GC'd paths pending deletion
+        self._stale_ckpt_error: Optional[BaseException] = None
+        self.preempt_stats: Optional[Dict] = None  # final-save timing
         self.best_val = float("inf")
         self.best_ckpt: Optional[str] = None
         if config.resume:
@@ -257,46 +262,105 @@ class TrainEngine:
     def run(self, on_step: Optional[Callable[[int, Dict], None]] = None
             ) -> List[Dict]:
         """Train for ``config.steps`` steps; returns the metrics history
-        (same record format as the legacy train() loop)."""
+        (same record format as the legacy train() loop).
+
+        With ``config.preemption`` (or the ``preempt_at_step`` chaos
+        hook) a SIGTERM/SIGUSR1 lets the in-flight step complete, then
+        takes a final SYNCHRONOUS checkpoint and raises
+        :class:`repro.launch.resilience.Preempted` -- the orderly-exit
+        half of the DESIGN.md §12 preemption choreography."""
+        from repro.launch import resilience
         c = self.config
         start = self.step_idx          # > 0 after a resume
-        with self._mesh_ctx():
-            t0 = time.time()
-            it = self.pipeline.iterate(self.r_sched[start:],
-                                       start_step=start)
-            for i, batch in zip(range(start, c.steps), it):
-                metrics = self.dispatch(batch, int(self.r_sched[i]))
-                if i % c.log_every == 0 or i == c.steps - 1:
-                    m = {k: float(v) for k, v in metrics.items()}
-                    m["step"] = i
-                    m["wall_s"] = round(time.time() - t0, 1)
-                    self.history.append(m)
-                    print(f"step {i:5d}  loss {m['loss']:.4f}  "
-                          f"lr {m['lr']:.2e}  ({m['wall_s']}s)")
-                pending_val = None
-                if c.eval_every and i and i % c.eval_every == 0:
-                    em = self.evaluate()
-                    self.history.append(dict(em, step=i, eval=True))
-                    print(f"step {i:5d}  val_loss {em['val_loss']:.4f}")
-                    pending_val = em["val_loss"]
-                if on_step is not None:
-                    on_step(i, metrics)
-                if c.ckpt and c.ckpt_every and i and i % c.ckpt_every == 0:
-                    self.save(f"{c.ckpt}-{i}", periodic=True)
-                if pending_val is not None:
-                    # after the save: when eval and ckpt cadences align,
-                    # the marker points at THIS step's checkpoint, not
-                    # the previous one
-                    self._mark_best(pending_val)
+        handler = None
+        if c.preemption or c.preempt_at_step is not None:
+            handler = resilience.PreemptionHandler(
+                preempt_at_step=c.preempt_at_step).install()
+        try:
+            with self._mesh_ctx():
+                t0 = time.time()
+                it = self.pipeline.iterate(self.r_sched[start:],
+                                           start_step=start)
+                for i, batch in zip(range(start, c.steps), it):
+                    metrics = self.dispatch(batch, int(self.r_sched[i]))
+                    if i % c.log_every == 0 or i == c.steps - 1:
+                        m = {k: float(v) for k, v in metrics.items()}
+                        m["step"] = i
+                        m["wall_s"] = round(time.time() - t0, 1)
+                        self.history.append(m)
+                        print(f"step {i:5d}  loss {m['loss']:.4f}  "
+                              f"lr {m['lr']:.2e}  ({m['wall_s']}s)")
+                    pending_val = None
+                    if c.eval_every and i and i % c.eval_every == 0:
+                        em = self.evaluate()
+                        self.history.append(dict(em, step=i, eval=True))
+                        print(f"step {i:5d}  "
+                              f"val_loss {em['val_loss']:.4f}")
+                        pending_val = em["val_loss"]
+                    if on_step is not None:
+                        on_step(i, metrics)
+                    if c.ckpt and c.ckpt_every and i \
+                            and i % c.ckpt_every == 0:
+                        self.save(f"{c.ckpt}-{i}", periodic=True)
+                    if pending_val is not None:
+                        # after the save: when eval and ckpt cadences
+                        # align, the marker points at THIS step's
+                        # checkpoint, not the previous one
+                        self._mark_best(pending_val)
+                    if handler is not None and handler.poll(i):
+                        self._preempt_finalize(i, handler)
+            if c.ckpt:
+                self.save(c.ckpt)
+                print(f"checkpoint -> {c.ckpt}")
+            self.wait_checkpoints()    # barrier for in-flight writes
+            self._write_metrics()
+            return self.history
+        finally:
+            if handler is not None:
+                handler.uninstall()
+
+    def _preempt_finalize(self, i: int, handler) -> None:
+        """Orderly preemption exit: the step that was in flight has
+        completed.  Stop the prefetch thread, drain (and absorb) any
+        pending async-write error, take a final SYNCHRONOUS checkpoint,
+        persist the metrics history, and raise ``Preempted`` for
+        ``launch/train.py`` to translate into the resumable exit code."""
+        from repro.launch import resilience
+        c = self.config
+        sig = handler.received
+        print(f"[preempt] signal {sig} after step {i}: "
+              f"final synchronous save, then resumable exit")
+        self.pipeline.stop()
+        try:
+            self.wait_checkpoints()
+        except Exception as e:
+            # an EARLIER async write failed; its prune list is still in
+            # _prune_backlog (re-queued by the next save) -- it must not
+            # abort the final preemption save, which may become the only
+            # durable copy of this run segment
+            print(f"[preempt] pending async save had failed: {e!r}; "
+                  f"final save proceeds")
+        path = None
         if c.ckpt:
-            self.save(c.ckpt)
-            print(f"checkpoint -> {c.ckpt}")
-        self.wait_checkpoints()        # barrier for in-flight writes
-        if c.metrics_out:
+            path = f"{c.ckpt}-{i}"
+            if self._ckpt_history and self._ckpt_history[-1] == path:
+                # the periodic cadence saved this very step already
+                pass
+            else:
+                t0 = time.time()
+                self.save(path, block=True, periodic=True)
+                self.preempt_stats = {"step": i,
+                                      "final_save_s": time.time() - t0}
+            print(f"[preempt] checkpoint durable -> {path}")
+        self._write_metrics()
+        raise resilience.Preempted(step=self.step_idx, checkpoint=path,
+                                   signum=sig)
+
+    def _write_metrics(self) -> None:
+        if self.config.metrics_out:
             import json
-            with open(c.metrics_out, "w") as f:
+            with open(self.config.metrics_out, "w") as f:
                 json.dump(self.history, f, indent=1)
-        return self.history
 
     # -- evaluation ------------------------------------------------------
     def evaluate(self, n_batches: Optional[int] = None) -> Dict[str, float]:
@@ -349,7 +413,12 @@ class TrainEngine:
                 prune += [p for p in self._prune_backlog
                           if p not in prune and p not in keep
                           and os.path.isdir(p)]
-                self._prune_backlog = prune
+        else:
+            # final / preemption saves drain the backlog too: this may
+            # be the run's last save, so an orphaned prune list would
+            # leak GC'd directories forever
+            prune = [p for p in self._prune_backlog if os.path.isdir(p)]
+        self._prune_backlog = prune
         extra = {"arch": self.arch, "reduced": self.reduced,
                  "seed": c.seed, "steps": c.steps, "rollout": c.rollout,
                  "scheme": self.cfg.scheme,
@@ -361,11 +430,27 @@ class TrainEngine:
                  "best": {"val": (None if self.best_val == float("inf")
                                   else self.best_val),
                           "ckpt": self.best_ckpt},
-                 "ckpt_history": list(self._ckpt_history)}
+                 "ckpt_history": list(self._ckpt_history),
+                 # prune list persisted with the save: if this process
+                 # dies before the deletions run, the resumed run
+                 # re-queues them instead of orphaning the GC state
+                 "prune_backlog": list(self._prune_backlog)}
+        try:
+            self._writer.wait()
+        except Exception as e:
+            # a FAILED earlier async write surfaces at the writer's
+            # in-flight guard.  It must not abort THIS save (a final
+            # preemption save may be the last durable copy of the run);
+            # its prune list stays queued in _prune_backlog, and the
+            # error is re-raised at the next wait_checkpoints() barrier.
+            print(f"[ckpt] earlier async checkpoint write failed: {e!r}; "
+                  f"proceeding with save of {path!r}")
+            self._stale_ckpt_error = e
         self.last_save = self._writer.save(
             path, {"params": self.params, "opt_state": self.opt_state},
             step=self.step_idx, extra=extra, mesh=self.mesh, block=block,
-            prune=prune)
+            prune=prune, process_index=jax.process_index(),
+            process_count=jax.process_count())
 
     def _mark_best(self, val_loss: float) -> None:
         """Track the best eval loss; point the ``<ckpt>-best.json`` marker
@@ -390,14 +475,29 @@ class TrainEngine:
 
     def wait_checkpoints(self) -> None:
         """Barrier for in-flight checkpoint writes (re-raises their
-        errors on this thread)."""
+        errors on this thread) -- including an absorbed error from an
+        earlier failed write that ``save`` proceeded past."""
         self._writer.wait()
+        if self._stale_ckpt_error is not None:
+            err, self._stale_ckpt_error = self._stale_ckpt_error, None
+            raise err
 
     def _restore(self, path: str) -> None:
         """Exact resume: params, opt state (incl. Adam step), loop step
         index, rollout schedule (revalidated from config), and the data
         pipeline cursor -- an interrupted run continues with a
-        bit-identical loss history (``resume_exact`` dist scenario)."""
+        bit-identical loss history (``resume_exact`` dist scenario).
+
+        The restore is ELASTIC (DESIGN.md §12): the checkpoint may have
+        been written on a different mesh shape.  Every leaf is
+        reassembled from the manifest's global index bounds against THIS
+        engine's own param / ZeRO-1 layouts (``specs=`` override below),
+        so moments and fp32 masters land sharded over the current data
+        axis even when the saved topology -- and hence the saved specs'
+        divisibility choices -- differ (``elastic_reshard_resume``
+        scenario).  The data pipeline needs no refit: its read plans are
+        derived from the current mesh at construction, only the cursor
+        is restored."""
         c = self.config
         man = ckpt.load_manifest(path)
         for field in ("seed", "rollout", "steps"):
@@ -420,10 +520,21 @@ class TrainEngine:
                 f"resume {path!r}: checkpoint precision {prec!r} != engine "
                 f"policy {self.policy.name!r} -- param dtypes and the "
                 f"master-weight state would not line up; {hint}")
+        cur_shape = (None if self.mesh is None
+                     else tuple(self.mesh.devices.shape))
+        if (man.mesh_shape is not None and cur_shape is not None
+                and tuple(man.mesh_shape) != cur_shape):
+            print(f"[resume] elastic reshard: checkpoint mesh "
+                  f"{tuple(man.mesh_shape)} -> current mesh {cur_shape}")
+        pspecs = ospecs = None
+        if self._param_shardings is not None:
+            pspecs = jax.tree.map(lambda s: s.spec, self._param_shardings)
+        if self._opt_shardings is not None:
+            ospecs = jax.tree.map(lambda s: s.spec, self._opt_shardings)
         params = ckpt.restore_tree(path, "params", like=self.params,
-                                   mesh=self.mesh)
+                                   mesh=self.mesh, specs=pspecs)
         opt = ckpt.restore_tree(path, "opt_state", like=self.opt_state,
-                                mesh=self.mesh)
+                                mesh=self.mesh, specs=ospecs)
         if self.mesh is None:
             params = jax.tree.map(jnp.asarray, params)
             opt = jax.tree.map(jnp.asarray, opt)
@@ -447,6 +558,10 @@ class TrainEngine:
             self.best_ckpt = best.get("ckpt")
         self._ckpt_history = [p for p in man.extra.get("ckpt_history", [])
                               if os.path.isdir(p)]
+        # deletions the dead process never ran: re-queued at the next save
+        self._prune_backlog = [
+            p for p in man.extra.get("prune_backlog", [])
+            if os.path.isdir(p)]
 
     # -- benchmarking ----------------------------------------------------
     def benchmark(self, steps: int = 10, warmup: int = 2) -> float:

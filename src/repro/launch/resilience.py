@@ -1,0 +1,265 @@
+"""Fault-tolerant elastic training: preemption handling + supervised
+relaunch (ROADMAP item 3, DESIGN.md §12).
+
+The 256-GPU regime the paper trains in is exactly where node loss and
+preemption are routine; a long campaign survives them with three layers:
+
+* :class:`PreemptionHandler` -- catches SIGTERM/SIGUSR1 (the signals
+  cluster schedulers send before reclaiming a node), lets the in-flight
+  step finish, and tells the engine to take a final SYNCHRONOUS save
+  and raise :class:`Preempted`.  ``launch/train.py`` translates that
+  into :data:`RESUMABLE_EXIT_CODE` so a supervisor can distinguish
+  "preempted, checkpoint durable, relaunch me" from a crash.
+
+* :class:`Supervisor` -- the relaunch loop behind ``--supervise
+  --max-restarts N``: runs the training command, auto-discovers the
+  latest COMPLETE checkpoint (``repro.checkpoint.latest_checkpoint``
+  validates manifest + shard files, so torn saves are never resumed
+  from) before every launch, restarts immediately on a resumable exit
+  and with jittered exponential backoff on a crash.
+
+* elastic resharding lives in ``TrainEngine._restore``: the checkpoint
+  may have been written on a DIFFERENT mesh shape -- the engine refits
+  params and ZeRO-1 moment/master layouts to the current mesh, so an
+  8-way job that lost a node continues on the survivors.
+
+Deterministic chaos-testing hook: ``REPRO_PREEMPT_AT_STEP=N`` (or
+``EngineConfig(preempt_at_step=N)``) makes the handler deliver a REAL
+``SIGTERM`` to its own process after training step ``N`` completes --
+the full signal path is exercised, at a reproducible step.
+"""
+from __future__ import annotations
+
+import os
+import random
+import signal
+import subprocess
+import sys
+import time
+import warnings
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.checkpoint.sharded import (checkpoint_complete,  # noqa: F401
+                                      latest_checkpoint)
+
+# EX_TEMPFAIL: the sysexits.h "transporter can retry" code -- distinct
+# from 0 (done) and from crash codes, so a supervisor knows the exit was
+# an orderly preemption with a durable checkpoint behind it.
+RESUMABLE_EXIT_CODE = 75
+
+PREEMPT_ENV = "REPRO_PREEMPT_AT_STEP"
+
+
+class Preempted(Exception):
+    """Raised out of ``TrainEngine.run()`` after a preemption signal:
+    the in-flight step finished, the final synchronous save (when a
+    checkpoint path is configured) is durable, and the process should
+    exit :data:`RESUMABLE_EXIT_CODE`."""
+
+    def __init__(self, step: int, checkpoint: Optional[str] = None,
+                 signum: Optional[int] = None):
+        self.step = step
+        self.checkpoint = checkpoint
+        self.signum = signum
+        super().__init__(
+            f"preempted at step {step} (checkpoint={checkpoint!r}, "
+            f"signal={signum})")
+
+
+def _env_int(name: str) -> Optional[int]:
+    val = os.environ.get(name)
+    return int(val) if val not in (None, "") else None
+
+
+class PreemptionHandler:
+    """Signal-driven stop flag for the training loop.
+
+    ``install()`` replaces the process handlers for ``signals`` (default
+    SIGTERM + SIGUSR1) with a flag-setter; the engine calls ``poll(i)``
+    after each completed step and, when it returns True, finishes with a
+    final synchronous save instead of dying mid-write.  ``uninstall()``
+    restores the previous handlers (the engine does this in a finally).
+
+    Handlers can only be installed from the main thread; elsewhere the
+    handler degrades to an inert flag with a warning (the supervisor
+    still restarts on the raw kill, it just loses the final save).
+    """
+
+    DEFAULT_SIGNALS = (signal.SIGTERM, signal.SIGUSR1)
+
+    def __init__(self, signals: Sequence[int] = DEFAULT_SIGNALS,
+                 preempt_at_step: Optional[int] = None):
+        self.signals = tuple(signals)
+        self.received: Optional[int] = None   # signal number once caught
+        self.preempt_at_step = (preempt_at_step
+                                if preempt_at_step is not None
+                                else _env_int(PREEMPT_ENV))
+        self._prev: dict = {}
+        self.installed = False
+
+    # -- signal plumbing -------------------------------------------------
+    def _on_signal(self, signum, frame):
+        del frame
+        self.received = signum
+
+    def install(self) -> "PreemptionHandler":
+        try:
+            for s in self.signals:
+                self._prev[s] = signal.signal(s, self._on_signal)
+            self.installed = True
+        except ValueError:
+            # not the main thread: restore whatever we managed to set
+            self.uninstall()
+            warnings.warn(
+                "PreemptionHandler: signal handlers can only be installed "
+                "from the main thread; signal-driven final saves disabled "
+                "for this run")
+        return self
+
+    def uninstall(self) -> None:
+        for s, prev in self._prev.items():
+            signal.signal(s, prev)
+        self._prev = {}
+        self.installed = False
+
+    def __enter__(self) -> "PreemptionHandler":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+
+    # -- loop interface --------------------------------------------------
+    @property
+    def should_stop(self) -> bool:
+        return self.received is not None
+
+    def poll(self, step: int) -> bool:
+        """True once a preemption signal has arrived.  With the chaos
+        hook armed (``preempt_at_step``), completing that step delivers
+        a real SIGTERM to this process first -- the production signal
+        path, at a deterministic step."""
+        if (self.installed and not self.should_stop
+                and self.preempt_at_step is not None
+                and step == self.preempt_at_step):
+            os.kill(os.getpid(), signal.SIGTERM)
+        return self.should_stop
+
+
+class Supervisor:
+    """Relaunch loop: run a training command until it exits clean, with
+    automatic resume-from-latest-complete-checkpoint on every launch.
+
+    Parameters
+    ----------
+    build_cmd : (resume_path, attempt) -> argv list.  ``resume_path`` is
+        the newest COMPLETE checkpoint under ``ckpt_root`` (None on a
+        cold start), rediscovered before EVERY launch so a relaunch
+        always continues from the most recent durable save -- including
+        one written by a previous supervisor incarnation.
+    ckpt_root : directory scanned by ``latest_checkpoint``; ``prefix``
+        restricts discovery to ``<prefix>`` / ``<prefix>-*`` entries
+        (the engine's ``--ckpt out/ck`` layout -> root="out", prefix="ck").
+    max_restarts : relaunch budget.  Resumable exits restart immediately
+        (the work is checkpointed; waiting buys nothing); crash exits
+        back off exponentially with jitter up to ``max_backoff``.
+    run_cmd / sleep_fn : injectable for tests.
+    """
+
+    def __init__(self, build_cmd: Callable[[Optional[str], int], List[str]],
+                 *, ckpt_root: Optional[str] = None,
+                 prefix: Optional[str] = None, max_restarts: int = 3,
+                 backoff: float = 1.0, max_backoff: float = 60.0,
+                 resumable_codes: Tuple[int, ...] = (RESUMABLE_EXIT_CODE,),
+                 env: Optional[dict] = None,
+                 run_cmd: Optional[Callable[[List[str]], int]] = None,
+                 sleep_fn: Callable[[float], None] = time.sleep):
+        self.build_cmd = build_cmd
+        self.ckpt_root = ckpt_root
+        self.prefix = prefix
+        self.max_restarts = max_restarts
+        self.backoff = backoff
+        self.max_backoff = max_backoff
+        self.resumable_codes = tuple(resumable_codes)
+        self.env = env
+        self._run_cmd = run_cmd or (
+            lambda argv: subprocess.call(argv, env=self.env))
+        self.sleep_fn = sleep_fn
+        self.attempts: List[int] = []      # exit code per launch
+        self.resumes: List[Optional[str]] = []  # resume path per launch
+        self.backoffs: List[float] = []    # sleeps taken (crash restarts)
+
+    def _discover(self) -> Optional[str]:
+        if not self.ckpt_root:
+            return None
+        return latest_checkpoint(self.ckpt_root, prefix=self.prefix)
+
+    def run(self) -> int:
+        restarts = 0
+        delay = self.backoff
+        while True:
+            resume = self._discover()
+            argv = self.build_cmd(resume, len(self.attempts))
+            self.resumes.append(resume)
+            rc = self._run_cmd(argv)
+            self.attempts.append(rc)
+            if rc == 0:
+                return 0
+            if restarts >= self.max_restarts:
+                print(f"[supervisor] exit {rc} with no restart budget "
+                      f"left ({self.max_restarts}); giving up")
+                return rc
+            restarts += 1
+            if rc in self.resumable_codes:
+                print(f"[supervisor] resumable exit ({rc}); relaunching "
+                      f"immediately (restart {restarts}/{self.max_restarts})")
+                continue
+            sleep = delay * (1.0 + 0.25 * random.random())
+            print(f"[supervisor] crash exit ({rc}); backing off "
+                  f"{sleep:.1f}s then relaunching "
+                  f"(restart {restarts}/{self.max_restarts})")
+            self.backoffs.append(sleep)
+            self.sleep_fn(sleep)
+            delay = min(delay * 2.0, self.max_backoff)
+
+
+def strip_args(argv: Sequence[str], flags: Sequence[str],
+               valued: Sequence[str] = ()) -> List[str]:
+    """Drop bare ``flags`` and ``valued`` options (both ``--x v`` and
+    ``--x=v`` forms) from an argv copy -- used to rebuild the child
+    command from the supervisor's own argv."""
+    out: List[str] = []
+    skip = False
+    for a in argv:
+        if skip:
+            skip = False
+            continue
+        if a in flags:
+            continue
+        if a in valued:
+            skip = True
+            continue
+        if any(a.startswith(v + "=") for v in valued):
+            continue
+        out.append(a)
+    return out
+
+
+def supervise_train_cli(args, argv: Sequence[str]) -> int:
+    """The ``--supervise`` mode of ``launch/train.py``: relaunch this
+    same command (minus the supervisor flags, plus ``--resume <latest>``)
+    until it exits clean or the restart budget runs out."""
+    root = os.path.dirname(os.path.abspath(args.ckpt)) or "."
+    prefix = os.path.basename(args.ckpt)
+    base = strip_args(argv, flags=("--supervise",),
+                      valued=("--max-restarts", "--resume"))
+
+    def build(resume: Optional[str], attempt: int) -> List[str]:
+        del attempt
+        cmd = [sys.executable, "-m", "repro.launch.train"] + list(base)
+        if resume:
+            cmd += ["--resume", resume]
+        return cmd
+
+    sup = Supervisor(build, ckpt_root=root, prefix=prefix,
+                     max_restarts=args.max_restarts)
+    return sup.run()

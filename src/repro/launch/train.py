@@ -22,12 +22,21 @@ for A/B comparison; both produce bit-identical batches.
 
 Reduced configs run real optimization on the synthetic pipelines; the
 loss curves in EXPERIMENTS.md come from here.
+
+Fault tolerance (DESIGN.md §12): the CLI installs a
+``PreemptionHandler`` -- SIGTERM/SIGUSR1 finishes the in-flight step,
+takes a final synchronous save, and exits code 75 (resumable).
+``--supervise --max-restarts N`` wraps the whole thing in the
+``Supervisor`` relaunch loop, which rediscovers the latest COMPLETE
+checkpoint before every launch and passes it as ``--resume``.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 
 from repro.configs.registry import ARCH_IDS
+from repro.launch import resilience
 from repro.launch.engine import EngineConfig, TrainEngine
 
 
@@ -40,7 +49,8 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq_len: int = 128,
           async_save: bool = True,
           seed: int = 0, metrics_out: str = None, init_params=None,
           pipeline: str = "sharded", prefetch: int = 2, accum: int = 1,
-          zero1: bool = False, eval_every: int = 0, config_override=None):
+          zero1: bool = False, eval_every: int = 0, config_override=None,
+          preemption: bool = False, preempt_at_step: int = None):
     """Back-compat functional entry point; returns (history, params).
 
     New callers should construct a :class:`TrainEngine` directly --
@@ -57,7 +67,8 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq_len: int = 128,
             keep_ckpts=keep_ckpts, resume=resume, async_save=async_save,
             seed=seed, precision=precision,
             metrics_out=metrics_out, pipeline=pipeline, prefetch=prefetch,
-            accum=accum, zero1=zero1, eval_every=eval_every))
+            accum=accum, zero1=zero1, eval_every=eval_every,
+            preemption=preemption, preempt_at_step=preempt_at_step))
     history = engine.run()
     return history, engine.params
 
@@ -115,19 +126,37 @@ def main():
     ap.add_argument("--zero1", action="store_true",
                     help="ZeRO-1: shard optimizer moments over data")
     ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the relaunch Supervisor: restart on "
+                         "resumable exits / crashes, auto-resuming from "
+                         "the latest complete checkpoint (needs --ckpt)")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="relaunch budget under --supervise")
     args = ap.parse_args()
-    train(args.arch, steps=args.steps, batch=args.batch,
-          seq_len=args.seq_len, reduced=not args.full,
-          mesh_model=args.mesh_model, mesh_data=args.mesh_data,
-          scheme=args.scheme, impl=args.impl, kernel=args.kernel,
-          precision=args.precision, rollout=args.rollout,
-          lr=args.lr, ckpt=args.ckpt, ckpt_every=args.ckpt_every,
-          keep_ckpts=args.keep_ckpts,
-          resume=args.resume, async_save=not args.sync_save,
-          seed=args.seed,
-          metrics_out=args.metrics_out, pipeline=args.pipeline,
-          prefetch=args.prefetch, accum=args.accum, zero1=args.zero1,
-          eval_every=args.eval_every)
+    if args.supervise:
+        if not args.ckpt:
+            ap.error("--supervise requires --ckpt (the supervisor "
+                     "discovers resume points under its directory)")
+        sys.exit(resilience.supervise_train_cli(args, sys.argv[1:]))
+    try:
+        train(args.arch, steps=args.steps, batch=args.batch,
+              seq_len=args.seq_len, reduced=not args.full,
+              mesh_model=args.mesh_model, mesh_data=args.mesh_data,
+              scheme=args.scheme, impl=args.impl, kernel=args.kernel,
+              precision=args.precision, rollout=args.rollout,
+              lr=args.lr, log_every=args.log_every,
+              ckpt=args.ckpt, ckpt_every=args.ckpt_every,
+              keep_ckpts=args.keep_ckpts,
+              resume=args.resume, async_save=not args.sync_save,
+              seed=args.seed,
+              metrics_out=args.metrics_out, pipeline=args.pipeline,
+              prefetch=args.prefetch, accum=args.accum, zero1=args.zero1,
+              eval_every=args.eval_every, preemption=True)
+    except resilience.Preempted as p:
+        print(f"[train] {p}; exiting resumable "
+              f"({resilience.RESUMABLE_EXIT_CODE})")
+        sys.exit(resilience.RESUMABLE_EXIT_CODE)
 
 
 if __name__ == "__main__":

@@ -791,6 +791,174 @@ def scenario_resume_exact():
           "(bit-for-bit)", ok)
 
 
+def scenario_preempt_resume_exact():
+    """Fault tolerance end-to-end (ISSUE 7): a REAL SIGTERM mid-run (the
+    chaos hook self-delivers it after step 3), the child finishes the
+    in-flight step, takes a final synchronous save, exits the resumable
+    code; the Supervisor rediscovers the checkpoint and relaunches with
+    ``--resume``; the concatenated loss history of the two child
+    processes is BIT-IDENTICAL to an uninterrupted in-process run on the
+    same seed."""
+    import json
+    import tempfile
+
+    from repro.launch import resilience
+    from repro.launch.engine import EngineConfig, TrainEngine
+
+    steps, kill_at = 8, 3
+    root = tempfile.mkdtemp()
+
+    # uninterrupted in-process reference
+    ref = TrainEngine(
+        "weathermixer-1b", mesh_model=4, mesh_data=2, scheme="1d",
+        config=EngineConfig(steps=steps, batch=4, rollout=2, zero1=True,
+                            log_every=1))
+    h_ref = ref.run()
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    # the chaos hook: attempt 0's loop hits i==3 and self-SIGTERMs; the
+    # resumed child starts at i==4, so the SAME env never re-fires
+    env[resilience.PREEMPT_ENV] = str(kill_at)
+
+    def build(resume, attempt):
+        cmd = [sys.executable, "-m", "repro.launch.train",
+               "--arch", "weathermixer-1b", "--steps", str(steps),
+               "--batch", "4", "--rollout", "2", "--zero1",
+               "--mesh-model", "4", "--mesh-data", "2", "--scheme", "1d",
+               "--log-every", "1", "--ckpt", os.path.join(root, "ck"),
+               "--metrics-out", os.path.join(root, f"m{attempt}.json")]
+        if resume:
+            cmd += ["--resume", resume]
+        return cmd
+
+    sup = resilience.Supervisor(build, ckpt_root=root, prefix="ck",
+                                max_restarts=3, env=env)
+    rc = sup.run()
+    check(f"supervised run finished clean (rc={rc})", rc == 0)
+    check(f"attempt exit codes {sup.attempts} == "
+          f"[{resilience.RESUMABLE_EXIT_CODE}, 0]",
+          sup.attempts == [resilience.RESUMABLE_EXIT_CODE, 0])
+    check("relaunch resumed from the preemption checkpoint",
+          sup.resumes[0] is None and sup.resumes[1] is not None
+          and sup.resumes[1].endswith(f"ck-{kill_at}"))
+    check("resumable exit relaunched immediately (no backoff)",
+          sup.backoffs == [])
+
+    with open(os.path.join(root, "m0.json")) as f:
+        h0 = json.load(f)
+    with open(os.path.join(root, "m1.json")) as f:
+        h1 = json.load(f)
+    check(f"first child logged steps 0..{kill_at}",
+          [h["step"] for h in h0] == list(range(kill_at + 1)))
+    check(f"second child logged steps {kill_at + 1}..{steps - 1}",
+          [h["step"] for h in h1] == list(range(kill_at + 1, steps)))
+    h_cat = h0 + h1
+    ok = all(a["loss"] == b["loss"] and a["lr"] == b["lr"]
+             and a["grad_norm"] == b["grad_norm"]
+             for a, b in zip(h_ref, h_cat))
+    check("SIGTERM + supervisor restart == uninterrupted history "
+          "(bit-for-bit)", ok)
+
+
+def scenario_elastic_reshard_resume():
+    """Elastic resume (ISSUE 7): a ZeRO-1 run checkpointed on an 8-device
+    mesh (model=4 x data=2) resumes on a 4-device mesh (model=2 x
+    data=2) -- the engine refits params AND the zero1 moment/master
+    layouts to the new mesh -- with loss continuity, and a save from the
+    resumed engine shards bytes across the 4 survivors.  Plus the
+    pod-scale completeness contract: per-process index fragments, rank-0
+    merge, and a half-written pod save that stays invisible to
+    ``latest_checkpoint``."""
+    import tempfile
+
+    from repro.checkpoint import sharded
+    from repro.launch.engine import EngineConfig, TrainEngine
+
+    root = tempfile.mkdtemp()
+    path = os.path.join(root, "ck")
+
+    def engine(mesh_model, mesh_data, **kw):
+        return TrainEngine(
+            "weathermixer-1b", mesh_model=mesh_model, mesh_data=mesh_data,
+            scheme="1d",
+            config=EngineConfig(steps=6, batch=4, zero1=True,
+                                log_every=1, **kw))
+
+    # the "big" run: 8 devices, periodic save at loop index 3 (step 4)
+    big = engine(4, 2, ckpt=path, ckpt_every=3)
+    h_big = big.run()
+    ck = f"{path}-3"
+    check("8-way run checkpointed mid-flight",
+          sharded.checkpoint_complete(ck))
+    check("latest_checkpoint picks the final (higher-step) save",
+          sharded.latest_checkpoint(root, prefix="ck") == path)
+
+    # resume on HALF the devices
+    small = engine(2, 2, resume=ck)
+    check("elastic resume restored the step index", small.step_idx == 4)
+    check("elastic resume restored the pipeline cursor",
+          small.pipeline.cursor == 4)
+    mu = small.opt_state["mu"]["blocks"]["ch_fc1"]["w"]
+    check("restored zero1 moments live on the 4-device mesh",
+          dict(mu.sharding.mesh.shape) == {"data": 2, "model": 2})
+    flat = [a for e in mu.sharding.spec if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))]
+    check("zero1 moment layout refit to the new mesh (data axis kept)",
+          "data" in flat)
+
+    h_small = small.run()
+    tail = [h for h in h_big if h["step"] >= 4 and "eval" not in h]
+    check("resumed history length", len(h_small) == len(tail) == 2)
+    ok = all(np.allclose(a["loss"], b["loss"], rtol=1e-3, atol=1e-4)
+             for a, b in zip(tail, h_small))
+    check("8-way -> 4-way loss continuity (fp tolerance: reduction "
+          "order differs across mesh extents)", ok)
+
+    # byte accounting on the resumed topology: a fresh save spreads the
+    # bytes over the 4 surviving devices
+    small.save(os.path.join(root, "ck-resharded"), block=True)
+    per = small.last_save.bytes_per_rank
+    total = small.last_save.total_bytes
+    check(f"resharded save is sharded over the survivors "
+          f"(max rank {max(per.values())} of {total})",
+          len(per) == 4 and max(per.values()) <= 2 * total // 4)
+
+    # ---- pod-scale completeness: per-process indexes + rank-0 merge ----
+    snap = sharded.snapshot(
+        {"params": big.params, "opt_state": big.opt_state},
+        step=big.step_idx, mesh=big.mesh)
+    assign = {d: (0 if i < 4 else 1)
+              for i, d in enumerate(sorted(snap.bytes_per_rank))}
+    frags = sharded.partition_snapshot(snap, assign)
+    check("partition splits the byte accounting exactly",
+          sum(sum(f.bytes_per_rank.values()) for f in frags.values())
+          == snap.total_bytes)
+
+    pod = os.path.join(root, "pod")
+    # process 1 lands first: shards + index fragment, NO manifest yet
+    sharded.write_snapshot(frags[1], pod, process_index=1,
+                           process_count=2)
+    check("half-written pod save is incomplete (no manifest)",
+          not sharded.checkpoint_complete(pod))
+    check("half-written pod save invisible to latest_checkpoint",
+          sharded.latest_checkpoint(root, prefix="pod") is None)
+    # process 0 lands: writes its shards, merges, publishes the manifest
+    sharded.write_snapshot(frags[0], pod, process_index=0,
+                           process_count=2)
+    check("finalized pod save is complete",
+          sharded.checkpoint_complete(pod)
+          and sharded.latest_checkpoint(root, prefix="pod") == pod)
+    got = sharded.restore_tree(pod, "params")
+    want = sharded.restore_tree(path, "params")
+    ok = all(np.array_equal(np.asarray(a), np.asarray(b))
+             for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)))
+    check("pod-save restore bit-identical to the single-process save",
+          ok)
+
+
 SCENARIOS = {name[len("scenario_"):]: fn
              for name, fn in list(globals().items())
              if name.startswith("scenario_")}

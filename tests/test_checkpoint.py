@@ -407,6 +407,295 @@ def test_writer_prunes_only_after_write(tmp_path):
     assert os.path.exists(tmp_path / "new" / "manifest.json")
 
 
+# -- crash-safe shard writes (ISSUE 7 satellite) -----------------------
+
+def test_shard_writes_are_atomic(tmp_path, monkeypatch):
+    """A process killed mid-npz-write must never leave a truncated shard
+    at the final name: the payload goes to ``.tmp`` and is renamed into
+    place.  Simulated by making the rename step fail."""
+    params = {"w": np.arange(8.0)}
+    path = str(tmp_path / "ck")
+
+    real_replace = os.replace
+
+    def no_replace(src, dst):
+        raise OSError("killed before rename")
+
+    monkeypatch.setattr(os, "replace", no_replace)
+    with pytest.raises(OSError, match="killed"):
+        sharded.save_checkpoint(path, {"params": params})
+    monkeypatch.setattr(os, "replace", real_replace)
+    names = sorted(os.listdir(path))
+    # only tmp debris, nothing at a final name -> directory reads as torn
+    assert all(n.endswith(".tmp") for n in names), names
+    assert not sharded.checkpoint_complete(path)
+
+    # a clean write leaves no tmp files behind
+    sharded.save_checkpoint(path, {"params": params})
+    names = sorted(os.listdir(path))
+    assert not any(n.endswith(".tmp") for n in names), names
+    assert sharded.checkpoint_complete(path)
+
+
+def test_manifest_written_last(tmp_path):
+    """Ordering contract: every shard file a manifest references exists
+    by the time the manifest does (write_snapshot streams shards first)."""
+    order = []
+    real = sharded._write_npz_atomic
+
+    def spy(fname, members):
+        order.append(os.path.basename(fname))
+        real(fname, members)
+
+    path = str(tmp_path / "ck")
+    snap = sharded.snapshot({"params": {"w": np.arange(4.0)}})
+    try:
+        sharded._write_npz_atomic = spy
+        sharded.write_snapshot(snap, path)
+    finally:
+        sharded._write_npz_atomic = real
+    assert order == ["shard-d00000.npz"]     # shards before manifest.save
+
+
+# -- writer retry-with-backoff (ISSUE 7 satellite) ---------------------
+
+def test_writer_retries_transient_oserror(tmp_path):
+    calls = []
+
+    def flaky(snap, path):
+        calls.append(path)
+        if len(calls) < 3:
+            raise OSError("EIO: nfs blip")
+        sharded.write_snapshot(snap, path)
+
+    w = AsyncCheckpointWriter(write_fn=flaky, retry_backoff=0.01)
+    path = str(tmp_path / "ck")
+    w.save(path, {"params": {"x": np.arange(4.0)}}, step=9)
+    w.wait()                                  # no error: 3rd attempt won
+    assert len(calls) == 3
+    assert ckpt_io.restore(path)[2] == 9
+
+
+def test_writer_retry_budget_exhausted(tmp_path):
+    calls = []
+
+    def always_fails(snap, path):
+        calls.append(path)
+        raise OSError("disk gone")
+
+    w = AsyncCheckpointWriter(write_fn=always_fails, retries=3,
+                              retry_backoff=0.01)
+    w.save(str(tmp_path / "ck"), {"params": {"x": np.arange(2.0)}})
+    with pytest.raises(OSError, match="disk gone"):
+        w.wait()
+    assert len(calls) == 3                    # exactly the retry budget
+
+
+def test_writer_does_not_retry_nontransient_errors(tmp_path):
+    calls = []
+
+    def type_bug(snap, path):
+        calls.append(path)
+        raise ValueError("not weather, a bug")
+
+    w = AsyncCheckpointWriter(write_fn=type_bug, retry_backoff=0.01)
+    w.save(str(tmp_path / "ck"), {"params": {"x": np.arange(2.0)}})
+    with pytest.raises(ValueError):
+        w.wait()
+    assert len(calls) == 1
+
+
+# -- latest_checkpoint discovery (ISSUE 7 satellite) -------------------
+
+def _mini_ckpt(path, step):
+    sharded.save_checkpoint(str(path), {"params": {"w": np.arange(4.0)}},
+                            step=step)
+
+
+def test_latest_checkpoint_picks_newest_complete(tmp_path):
+    assert sharded.latest_checkpoint(str(tmp_path)) is None  # cold start
+    _mini_ckpt(tmp_path / "ck-2", 2)
+    _mini_ckpt(tmp_path / "ck-5", 5)
+    assert sharded.latest_checkpoint(str(tmp_path)) == \
+        str(tmp_path / "ck-5")
+    # by manifest STEP, not directory name ordering
+    _mini_ckpt(tmp_path / "ck-10", 3)
+    assert sharded.latest_checkpoint(str(tmp_path)) == \
+        str(tmp_path / "ck-5")
+
+
+def test_latest_checkpoint_skips_torn_saves(tmp_path):
+    _mini_ckpt(tmp_path / "ck-1", 1)
+    # torn save A: shards but no manifest (killed before the last write)
+    torn = tmp_path / "ck-7"
+    torn.mkdir()
+    (torn / "shard-d00000.npz").write_bytes(b"partial")
+    assert sharded.latest_checkpoint(str(tmp_path)) == \
+        str(tmp_path / "ck-1")
+    # torn save B: manifest references a shard file that is gone
+    _mini_ckpt(tmp_path / "ck-9", 9)
+    os.remove(tmp_path / "ck-9" / "shard-d00000.npz")
+    assert not sharded.checkpoint_complete(str(tmp_path / "ck-9"))
+    assert sharded.latest_checkpoint(str(tmp_path)) == \
+        str(tmp_path / "ck-1")
+    # torn save C: orphaned per-process index fragments, no manifest
+    pod = tmp_path / "ck-11"
+    pod.mkdir()
+    man = MF.Manifest(step=11, groups={})
+    man.save_index(str(pod), 1, 2)
+    assert sharded.latest_checkpoint(str(tmp_path)) == \
+        str(tmp_path / "ck-1")
+    # ...and none of them crash restore discovery or complete-checks
+    assert not sharded.checkpoint_complete(str(torn))
+    assert not sharded.checkpoint_complete(str(pod))
+
+
+def test_latest_checkpoint_prefix_filter(tmp_path):
+    _mini_ckpt(tmp_path / "ck-3", 3)
+    _mini_ckpt(tmp_path / "other-8", 8)
+    _mini_ckpt(tmp_path / "ckextra", 9)      # not ck or ck-*: excluded
+    assert sharded.latest_checkpoint(str(tmp_path), prefix="ck") == \
+        str(tmp_path / "ck-3")
+    assert sharded.latest_checkpoint(str(tmp_path), prefix="other") == \
+        str(tmp_path / "other-8")
+    # root itself can be the checkpoint
+    _mini_ckpt(tmp_path / "solo", 1)
+    assert sharded.latest_checkpoint(str(tmp_path / "solo")) == \
+        str(tmp_path / "solo")
+
+
+def test_latest_checkpoint_after_engine_gc(tmp_path):
+    """Discovery composes with keep-last-k GC + the best marker: what
+    the engine leaves behind is exactly what latest_checkpoint ranks,
+    and the GC'd dirs are gone, not candidates."""
+    from repro.launch.engine import EngineConfig, TrainEngine
+    path = str(tmp_path / "ck")
+    eng = TrainEngine("weathermixer-1b", config=EngineConfig(
+        steps=7, batch=2, log_every=10, ckpt=path, ckpt_every=1,
+        keep_ckpts=2, async_save=False))
+    eng.run()
+    eng.wait_checkpoints()
+    # final save (step 7) outranks the surviving periodic ck-5/ck-6
+    assert sharded.latest_checkpoint(str(tmp_path), prefix="ck") == path
+    # drop the final save: the newest surviving periodic wins
+    import shutil
+    shutil.rmtree(path)
+    assert sharded.latest_checkpoint(str(tmp_path), prefix="ck") == \
+        path + "-6"
+
+
+# -- per-process index merge (pod-scale completeness) ------------------
+
+def _fragment(step, fname, rows, full):
+    shard = MF.ShardEntry(fname, "params/w#0", (rows, (0, 4)), 0)
+    entry = MF.LeafEntry((4, 4), "float32", [None, None], (shard,))
+    man = MF.Manifest(step=step, groups={"params": {"w": entry}})
+    return sharded.Snapshot(man, {fname: {"params/w#0":
+                                          full[rows[0]:rows[1]]}}, {})
+
+
+def test_pod_save_merges_index_fragments(tmp_path):
+    full = np.arange(16, dtype=np.float32).reshape(4, 4)
+    path = str(tmp_path / "ck")
+    f0 = _fragment(4, "shard-d00000.npz", (0, 2), full)
+    f1 = _fragment(4, "shard-d00001.npz", (2, 4), full)
+    # process 1 first: index fragment lands, manifest does not
+    sharded.write_snapshot(f1, path, process_index=1, process_count=2)
+    assert os.path.exists(os.path.join(path, MF.index_name(1)))
+    assert not os.path.exists(os.path.join(path, MF.MANIFEST_NAME))
+    assert not sharded.checkpoint_complete(path)
+    # process 0: writes, waits for all fragments, merges, finalizes
+    sharded.write_snapshot(f0, path, process_index=0, process_count=2)
+    assert sharded.checkpoint_complete(path)
+    man = ckpt_io.load_manifest(path)
+    assert man.step == 4
+    assert len(man.groups["params"]["w"].shards) == 2
+    got = sharded.restore_tree(path, "params")
+    np.testing.assert_array_equal(got["w"], full)
+
+
+def test_pod_finalize_times_out_on_missing_rank(tmp_path):
+    full = np.arange(16, dtype=np.float32).reshape(4, 4)
+    path = str(tmp_path / "ck")
+    f0 = _fragment(2, "shard-d00000.npz", (0, 2), full)
+    os.makedirs(path)
+    f0.manifest.save_index(path, 0, 3)
+    with pytest.raises(TimeoutError, match="index-p00001"):
+        sharded.finalize_checkpoint(path, 3, timeout=0.2, poll=0.02)
+    assert not os.path.exists(os.path.join(path, MF.MANIFEST_NAME))
+
+
+def test_merge_manifests_rejects_torn_pod_save(tmp_path):
+    full = np.arange(16, dtype=np.float32).reshape(4, 4)
+    f0 = _fragment(2, "shard-d00000.npz", (0, 2), full)
+    f1 = _fragment(3, "shard-d00001.npz", (2, 4), full)   # step skew
+    with pytest.raises(ValueError, match="torn pod save"):
+        MF.merge_manifests([f0.manifest, f1.manifest])
+
+
+# -- GC prune backlog survives failed/final saves (ISSUE 7 satellite) --
+
+def test_final_save_survives_stale_write_error_and_prunes(tmp_path):
+    """A failed async periodic write must not (a) abort the NEXT save --
+    in production that next save is the final preemption save -- or (b)
+    orphan its GC prune list.  The engine absorbs the stale error at
+    save(), re-queues the backlog, re-raises at wait_checkpoints()."""
+    from repro.launch.engine import EngineConfig, TrainEngine
+    path = str(tmp_path / "ck")
+    eng = TrainEngine("weathermixer-1b", config=EngineConfig(
+        steps=4, batch=2, log_every=10, ckpt=path, ckpt_every=1,
+        keep_ckpts=1))                        # async writer in the loop
+    # third periodic write (ck-3) fails after the engine has queued
+    # ck-1/ck-2 deletions behind it
+    real = sharded.write_snapshot
+    calls = []
+
+    def flaky(snap, p, **kw):
+        calls.append(p)
+        if len(calls) == 3:
+            raise OSError("transient EIO")
+        return real(snap, p, **kw)
+
+    eng._writer._write_fn = flaky
+    eng._writer.retries = 1                   # no writer-level retry
+    # the loop must NOT abort mid-run; the absorbed error re-surfaces at
+    # run()'s own wait_checkpoints() barrier -- AFTER the final save
+    with pytest.raises(OSError, match="EIO"):
+        eng.run()
+    eng.wait_checkpoints()                    # error consumed exactly once
+    # the final save landed despite the stale error...
+    assert sharded.checkpoint_complete(path)
+    # ...and the prune backlog was drained by it: older periodic dirs
+    # are gone (keep_ckpts=1)
+    survivors = {n for n in os.listdir(tmp_path)
+                 if n.startswith("ck-")
+                 and sharded.checkpoint_complete(str(tmp_path / n))}
+    assert "ck-1" not in survivors and "ck-2" not in survivors, survivors
+    assert sharded.latest_checkpoint(str(tmp_path), prefix="ck") == path
+
+
+def test_prune_backlog_persisted_and_restored(tmp_path):
+    """The backlog rides in manifest extra: a run that dies before its
+    deletions execute hands them to the resumed engine."""
+    from repro.launch.engine import EngineConfig, TrainEngine
+    stale = tmp_path / "ck-0"
+    stale.mkdir()
+    path = str(tmp_path / "ck")
+    eng = TrainEngine("internlm2-1.8b", config=EngineConfig(
+        steps=2, batch=2, seq_len=16, log_every=1, ckpt=path,
+        async_save=False))
+    eng._prune_backlog = [str(stale)]
+    eng.run()
+    man = ckpt_io.load_manifest(path)
+    # the final save drained the backlog (dir deleted) and recorded it
+    assert not stale.exists()
+    assert man.extra["prune_backlog"] == [str(stale)]
+    # a resumed engine drops already-deleted entries
+    res = TrainEngine("internlm2-1.8b", config=EngineConfig(
+        steps=2, batch=2, seq_len=16, log_every=1, resume=path))
+    assert res._prune_backlog == []
+
+
 # -- multi-device: sharded save + resharded restore --------------------
 
 def test_ckpt_sharded_reshard_scenario():

@@ -28,6 +28,9 @@ SCENARIOS = [
     # double its cost in tier-1)
     "resume_exact",
     "precision_bf16",
+    # preempt_resume_exact + elastic_reshard_resume run via
+    # tests/test_resilience.py (the resilience CI job needs them there;
+    # listing them here too would double their cost in tier-1)
 ]
 
 
