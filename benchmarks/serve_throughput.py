@@ -1,0 +1,174 @@
+"""Forecast serving throughput benchmark (ISSUE 8).
+
+Trains a tiny WeatherMixer on a host-emulated (model=4, data=2) mesh,
+saves a sharded checkpoint, then serves it with ``ForecastEngine`` on an
+8-way data-only serving mesh (the restore-anywhere path:
+checkpoint/serving.py refits the 8-way specs onto the serving mesh).
+
+Measured:
+
+  * ``continuous`` vs ``drain`` requests/s at mixed lead times
+    (1 and 8 rollout steps, alternating).  Drain pays max(lead) device
+    steps for every batch; continuous refills freed slots at step
+    boundaries and pays ~mean(lead).  ASSERTS continuous >= 1.2x drain
+    (also in --tiny: the gap is structural, not a timing artifact);
+  * zero steady-state recompiles: after ``warmup()`` a serving session
+    crossing four batch buckets (8 -> re-form at 1 -> grow 2 -> grow 4)
+    performs ZERO new traces (trace-time compile counter) --
+    ASSERTED, also in --tiny;
+  * serving-precision rows: the same fp32 checkpoint served bf16
+    (weights cast on restore) vs fp32;
+  * serving-mesh rows: mesh_data=1 vs mesh_data=8 for the same load.
+
+Absolute numbers on CPU are artifacts (results/README.md); the
+contributions are the continuous/drain ratio and the zero-recompile
+steady state.  Writes results/serve_throughput.csv unless --tiny.
+"""
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):   # `python benchmarks/serve_throughput.py`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import emit, run_subprocess_devices
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "serve_throughput.csv")
+
+MEASURE_CODE = """
+import os, tempfile, time
+import numpy as np
+from repro.configs.registry import get_config
+from repro.launch.engine import EngineConfig, TrainEngine
+from repro.serve.engine import ForecastEngine, ServeConfig
+
+cfg = get_config("weathermixer-1b").reduced().replace(
+    scheme="1d", wm_lat={lat}, wm_lon={lon}, d_model={dm},
+    wm_d_tok={dtok}, wm_d_ch={dch})
+R = {requests}
+LEADS = [1, 8]        # mixed horizons: the continuous-vs-drain gap
+
+# -- an 8-way (model=4, data=2) training checkpoint to serve ------------
+ckpt = os.path.join(tempfile.mkdtemp(), "ck")
+trainer = TrainEngine("weathermixer-1b", reduced=False,
+                      config_override=cfg, mesh_model=4, mesh_data=2,
+                      scheme="1d",
+                      config=EngineConfig(steps=2, batch=4, log_every=10))
+trainer.run()
+trainer.save(ckpt, block=True)
+
+rng = np.random.default_rng(0)
+fields = rng.normal(size=(R, cfg.wm_lat, cfg.wm_lon,
+                          cfg.wm_channels)).astype(np.float32)
+
+def build(mode="continuous", mesh_data=8, precision=None):
+    eng = ForecastEngine("weathermixer-1b", reduced=False,
+                         config_override=cfg, ckpt=ckpt,
+                         mesh_data=mesh_data,
+                         config=ServeConfig(buckets=(1, 2, 4, 8),
+                                            mode=mode,
+                                            precision=precision))
+    eng.warmup()
+    return eng
+
+def load(eng):
+    t0 = time.perf_counter()
+    rs = [eng.submit(fields[i], LEADS[i % len(LEADS)]) for i in range(R)]
+    eng.drain()
+    wall = time.perf_counter() - t0
+    assert all(r.done() for r in rs)
+    return rs, wall
+
+cont = build("continuous")
+rs, wall_c = load(cont)
+s = cont.summary(rs)
+
+# -- zero-recompile steady state across >=3 buckets ---------------------
+# the big load ran at bucket 8; now traverse 1 -> grow 2 -> grow 4
+cont.submit(fields[0], 4)
+assert cont.step_once() == "step"
+for i in (1, 2, 3):
+    cont.submit(fields[i], 2)
+cont.drain()
+sc = cont.sched.counters
+assert sc["formed"] >= 2 and sc["grown"] >= 2, sc
+delta = cont.stats["compiles"] - cont.stats["warm_compiles"]
+assert delta == 0, f"{{delta}} steady-state recompiles"
+cache = cont.compile_cache_size()
+assert cache in (-1, cont.stats["compiles"]), (
+    f"jit cache {{cache}} != traces {{cont.stats['compiles']}}")
+
+drain = build("drain")
+rd, wall_d = load(drain)
+ratio = (R / wall_c) / (R / wall_d)
+assert ratio >= 1.2, f"continuous only {{ratio:.2f}}x drain"
+
+print("CONTWALL", wall_c)
+print("DRAINWALL", wall_d)
+print("CONTSTEPS", s["device_steps"])
+print("DRAINSTEPS", drain.stats["device_steps"])
+print("P50", s["p50_s"])
+print("P95", s["p95_s"])
+print("WARMCOMPILES", cont.stats["warm_compiles"])
+print("RECOMPILES", delta)
+print("FORMED", sc["formed"])
+print("GROWN", sc["grown"])
+
+_, wall_b = load(build(precision="bf16"))
+print("BF16WALL", wall_b)
+_, wall_1 = load(build(mesh_data=1))
+print("MESH1WALL", wall_1)
+"""
+
+
+def run(tiny: bool = False):
+    lat, lon, dm, dtok, dch = ((16, 32, 64, 64, 64) if tiny
+                               else (48, 96, 128, 192, 192))
+    requests = 16 if tiny else 48
+    out = run_subprocess_devices(
+        MEASURE_CODE.format(lat=lat, lon=lon, dm=dm, dtok=dtok, dch=dch,
+                            requests=requests),
+        n_devices=8)
+    vals = {l.split()[0]: float(l.split()[1])
+            for l in out.splitlines() if l and l.split()[0].isupper()}
+    wc, wd = vals["CONTWALL"], vals["DRAINWALL"]
+    rps = lambda w: requests / w
+    return [
+        ("serve/continuous", int(wc / requests * 1e6),
+         f"req_s={rps(wc):.1f}|vs_drain={rps(wc) / rps(wd):.2f}x"
+         f"|steps={int(vals['CONTSTEPS'])}"),
+        ("serve/drain", int(wd / requests * 1e6),
+         f"req_s={rps(wd):.1f}|steps={int(vals['DRAINSTEPS'])}"),
+        ("serve/latency", int(vals["P50"] * 1e6),
+         f"p95_us={int(vals['P95'] * 1e6)}|mixed_leads=1,8"),
+        ("serve/steady_state_recompiles", int(vals["RECOMPILES"]),
+         f"warm={int(vals['WARMCOMPILES'])}|buckets=1,2,4,8"
+         f"|formed={int(vals['FORMED'])}|grown={int(vals['GROWN'])}"),
+        ("serve/bf16", int(vals["BF16WALL"] / requests * 1e6),
+         f"vs_fp32={wc / vals['BF16WALL']:.2f}x|cast_on_restore"),
+        ("serve/mesh_data1", int(vals["MESH1WALL"] / requests * 1e6),
+         f"vs_8way={vals['MESH1WALL'] / wc:.2f}x_slower"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small grid, no results/ write "
+                         "(assertions stay on)")
+    ap.add_argument("--no-write", action="store_true")
+    ap.add_argument("--out", default=RESULTS)
+    args = ap.parse_args()
+    rows = run(tiny=args.tiny)
+    emit(rows)
+    if not args.tiny and not args.no_write:
+        with open(args.out, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            for r in rows:
+                f.write(",".join(str(x) for x in r) + "\n")
+        print(f"[serve_throughput] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,11 @@
-"""Serve a small LM with batched requests: prefill + batched greedy
-decode through the Jigsaw-sharded serve_step (deliverable b, serving
-flavor).
+"""Serve a small LM with batched requests: FUSED prefill (one apply
+captures every layer's K/V) + batched greedy decode through the
+compile-once, cache-donating serve step (serve/step.py).
 
   python examples/serve_lm.py [--arch stablelm-3b] [--steps 24]
+
+For forecast-model serving (continuous batching, lead-time fan-out),
+see examples/serve_forecast.py.
 """
 import argparse
 import os
@@ -22,13 +25,14 @@ def main():
                     help="train briefly so generations are non-trivial")
     args = ap.parse_args()
 
+    import time
+
     import jax
     from repro.configs.registry import get_config
     from repro.data.tokens import TokenDataConfig, TokenDataset
     from repro.launch import shapes as SH
     from repro.launch.train import train
-    from repro.models import registry as M
-    from repro.serve.step import generate
+    from repro.serve.step import generate, jit_serve_step, prefill
 
     # quick training so the model predicts the affine-walk structure
     _, params = train(args.arch, steps=args.train_first, batch=8,
@@ -40,8 +44,22 @@ def main():
                                       seq_len=16, seed=123))
     prompts = jax.numpy.asarray(
         ds.sample_batch(0, args.batch)["tokens"][:, :8])
+    max_len = 8 + args.steps + 2
+
+    # fused prefill = one forward; token-wise = one decode step per
+    # prompt token (kept as the parity reference)
+    for fused, tag in ((True, "fused"), (False, "token-wise")):
+        t0 = time.perf_counter()
+        nxt, _ = prefill(params, prompts, cfg, jcfg, max_len, fused=fused)
+        jax.block_until_ready(nxt)
+        print(f"prefill[{tag:>10}]: {time.perf_counter() - t0:.2f}s "
+              f"-> next tokens {np.asarray(nxt).ravel()}")
+
     out = generate(params, prompts, cfg, jcfg, steps=args.steps,
-                   max_len=8 + args.steps + 2)
+                   max_len=max_len)
+    # the decode step is lru-cached by (cfg, jcfg): a second generate
+    # reuses the same executable (and donates the cache every step)
+    assert jit_serve_step(cfg, jcfg)._cache_size() == 1
     # the data's affine walk: next = (31 x + 17) % V; measure how often
     # the model follows it (vs 1/V for random)
     seq = np.concatenate([np.asarray(prompts), np.asarray(out)], axis=1)

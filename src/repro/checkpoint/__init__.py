@@ -6,9 +6,12 @@
                    resharded restore.
 * ``writer``    -- async background writer (snapshot on the caller's
                    thread, stream files off the critical path).
+* ``serving``   -- read-only params-group restore onto a serving mesh
+                   (any shape), with dtype cast to the serving policy.
 * ``io``        -- the legacy (path, params, opt_state, step) facade.
 """
 from repro.checkpoint.io import restore, save  # noqa: F401
+from repro.checkpoint.serving import restore_serving_params  # noqa: F401
 from repro.checkpoint.manifest import (Manifest, load_manifest,  # noqa: F401
                                        merge_manifests)
 from repro.checkpoint.sharded import (checkpoint_complete,  # noqa: F401

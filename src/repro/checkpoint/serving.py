@@ -1,0 +1,89 @@
+"""Read-only serving restore (DESIGN.md §13).
+
+Training checkpoints are zero-redundancy sharded saves whose manifest
+records the *saving* topology's PartitionSpecs.  Serving needs none of
+that topology: only the ``params`` group, landed on whatever mesh the
+serving fleet happens to have (usually data-only -- params replicated,
+batch sharded), possibly at a different precision than training kept
+its weights in.
+
+``restore_serving_params`` is that path: it validates the checkpoint's
+architecture against the engine's, restores ONLY ``params`` (never
+``opt_state`` -- a serving process must not pay for Adam moments), lets
+``sharded.restore_tree``'s spec refit replicate every training-sharded
+axis the serving mesh lacks, and finally casts leaves to the serving
+policy's dtypes (a bf16-trained checkpoint can serve fp32 and vice
+versa; shapes are validated leaf-by-leaf, dtypes are converted).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint.manifest import Manifest, load_manifest
+from repro.checkpoint.sharded import restore_tree
+
+
+def _cast_like(params, like):
+    """Validate shapes against ``like`` and cast dtypes to its leaves.
+
+    ``like`` is typically ``jax.eval_shape(M.init, ...)`` under the
+    SERVING config, so a precision mismatch between checkpoint and
+    serving policy becomes a cast here instead of a restore error.
+    """
+    import jax
+
+    def fit(path, leaf, ref):
+        key = jax.tree_util.keystr(path)
+        if tuple(leaf.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"serving restore: param {key} shape {tuple(leaf.shape)} "
+                f"!= model shape {tuple(ref.shape)} -- wrong config for "
+                "this checkpoint?")
+        if leaf.dtype != ref.dtype:
+            leaf = (leaf.astype(ref.dtype) if isinstance(leaf, jax.Array)
+                    else np.asarray(leaf, ref.dtype))
+        return leaf
+
+    try:
+        return jax.tree_util.tree_map_with_path(fit, params, like)
+    except ValueError as e:
+        if "serving restore" in str(e):
+            raise
+        raise ValueError(
+            f"serving restore: checkpoint param tree does not match the "
+            f"model's ({e})") from e
+
+
+def restore_serving_params(path: str, *, arch: Optional[str] = None,
+                           like=None, mesh=None, specs=None
+                           ) -> Tuple[object, Manifest]:
+    """Restore a training checkpoint's params for serving.
+
+    path : sharded checkpoint directory (any saving topology).
+    arch : expected arch id; mismatches against the manifest raise
+           (checkpoints predating the ``arch`` extra pass through).
+    like : optional params pytree/ShapeDtypeStructs under the SERVING
+           config -- shapes validated, dtypes cast (see ``_cast_like``).
+    mesh : serving mesh (None -> host numpy).  The manifest's saving
+           specs are refit onto it: axes it lacks replicate, so an
+           8-way training save lands on ANY serving shape.
+    specs: optional spec override (forwarded to ``restore_tree``).
+
+    Returns ``(params, manifest)`` -- the manifest carries training
+    metadata (step, precision, scheme) for logging/validation.
+    """
+    man = load_manifest(path)
+    if "params" not in man.groups:
+        raise ValueError(f"serving restore: {path!r} has no 'params' group "
+                         f"(groups: {sorted(man.groups)})")
+    ck_arch = man.extra.get("arch")
+    if arch is not None and ck_arch is not None and ck_arch != arch:
+        raise ValueError(f"serving restore: checkpoint arch {ck_arch!r} "
+                         f"!= serving arch {arch!r}")
+    params = restore_tree(path, "params", mesh=mesh, specs=specs,
+                          manifest=man)
+    if like is not None:
+        params = _cast_like(params, like)
+    return params, man

@@ -224,6 +224,7 @@ def attention_apply(params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
                     soft_cap: Optional[float] = None,
                     kv_cache: Optional[dict] = None,
                     rolling: bool = False,
+                    collect_kv: bool = False,
                     kv_spec=None,
                     x_kv: Optional[jax.Array] = None,
                     qk_norm: Optional[dict] = None,
@@ -288,6 +289,12 @@ def attention_apply(params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
                    window=window, kv_mask=kv_mask, soft_cap=soft_cap)
         new_cache = {"k": ck, "v": cv, "pos": pos + 1}
     else:
+        if collect_kv:
+            # fused prefill (serve/step.py): hand every prompt position's
+            # post-RoPE, pre-GQA-repeat K/V back for cache write-back --
+            # exactly what the decode branch above would have cached one
+            # token at a time
+            new_cache = {"k": k, "v": v}
         kk = _repeat_kv(k, n_heads // n_kv_heads)
         vv = _repeat_kv(v, n_heads // n_kv_heads)
         kv_positions = positions if x_kv is None else \

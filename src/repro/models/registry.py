@@ -43,3 +43,24 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
 
 def decode_step(params, cache, tokens, cfg: ModelConfig, jcfg: JigsawConfig):
     return module_for(cfg).decode_step(params, cache, tokens, cfg, jcfg)
+
+
+def prefill_cache(params, batch, cfg: ModelConfig, jcfg: JigsawConfig,
+                  max_len: int, dtype=jnp.bfloat16):
+    """Fused prefill: one teacher-forced forward + KV write-back.
+    Families without one raise NotImplementedError -- callers
+    (serve/step.py) fall back to the token-wise reference path."""
+    mod = module_for(cfg)
+    if not hasattr(mod, "prefill_cache"):
+        raise NotImplementedError(
+            f"{cfg.arch_id} ({cfg.family}) has no fused prefill")
+    return mod.prefill_cache(params, batch, cfg, jcfg, max_len, dtype=dtype)
+
+
+def forecast_step(params, fields, cfg: ModelConfig, jcfg: JigsawConfig):
+    """One autoregressive field-rollout step (serving hot path)."""
+    mod = module_for(cfg)
+    if not hasattr(mod, "forecast_step"):
+        raise ValueError(f"{cfg.arch_id} ({cfg.family}) has no "
+                         "autoregressive forecast step")
+    return mod.forecast_step(params, fields, cfg, jcfg)

@@ -108,7 +108,7 @@ def _kv_spec(cfg: ModelConfig, jcfg: JigsawConfig):
 
 def _layer_apply(lp, x, *, cfg: ModelConfig, jcfg: JigsawConfig,
                  positions, window, kv_cache=None, rolling=False,
-                 aux_in=0.0):
+                 collect_kv=False, aux_in=0.0):
     """One decoder layer. window: traced scalar (2**30 = full causal)."""
     h = _norm_apply(cfg, lp["attn_norm"], x)
     # Traced windows require the mask form (dq - dk < window); sdpa takes
@@ -118,6 +118,7 @@ def _layer_apply(lp, x, *, cfg: ModelConfig, jcfg: JigsawConfig,
         d_head=cfg.d_head, positions=positions, cfg=jcfg,
         causal=True, window=window, rope_theta=cfg.rope_theta,
         soft_cap=cfg.attn_soft_cap, kv_cache=kv_cache, rolling=rolling,
+        collect_kv=collect_kv,
         kv_spec=_kv_spec(cfg, jcfg) if kv_cache is not None else None,
         qk_norm=lp.get("qk_norm"), q_chunk=cfg.attn_q_chunk)
     x = x + attn_out
@@ -217,6 +218,65 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
         cache["rk"] = jnp.zeros(kvshape(leftover, w), dtype)
         cache["rv"] = jnp.zeros(kvshape(leftover, w), dtype)
     return cache
+
+
+def prefill_cache(params, batch, cfg: ModelConfig, jcfg: JigsawConfig,
+                  max_len: int, dtype=jnp.bfloat16):
+    """Fused prefill: ONE teacher-forced forward over the whole prompt,
+    capturing every layer's post-RoPE K/V from the scan and writing them
+    back into a fresh decode cache -- O(1) applies instead of O(S)
+    decode steps (the ISSUE-8 replacement for the token-wise prefill
+    loop, which serve/step.py keeps as the parity reference).
+
+    Returns (logits [B, S, V], cache) positioned exactly as if the
+    prompt had been fed token-by-token through ``decode_step``: token p
+    lands at slot ``p % s_max`` -- the same rolling slots the token-wise
+    writes use -- so decode reads it back with identical absolute-
+    position bookkeeping.
+
+    Uniform layer stacks only (``_period == 1``, including all-sliding-
+    window rolling caches); local:global stacks (gemma3) raise
+    NotImplementedError and the caller falls back token-wise.
+    """
+    if _period(cfg) != 1:
+        raise NotImplementedError("fused prefill: uniform layer stacks "
+                                  "only (local:global falls back)")
+    if batch.get("embeds") is not None:
+        raise NotImplementedError("fused prefill: text prompts only")
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed_apply(params["embed"], tokens)
+    positions = jnp.arange(s)
+    x = constrain(x, jcfg.rules.act(x.ndim))
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, w = xs
+        h, kv, aux = _layer_apply(lp, h, cfg=cfg, jcfg=jcfg,
+                                  positions=positions, window=w,
+                                  collect_kv=True, aux_in=aux)
+        return (h, aux), (kv["k"], kv["v"])
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, _aux), (ks, vs) = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                                       (params["layers"], windows))
+    x = _norm_apply(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = L.unembed_apply(params["embed"], x, jcfg)
+    else:
+        from repro.core.api import head_config
+        logits = L.linear_apply(params["lm_head"], x, head_config(jcfg))
+
+    cache = init_cache(cfg, b, max_len, dtype)
+    s_max = cache["k"].shape[2]
+    if cfg.sliding_window is None and s > s_max:
+        raise ValueError(f"prompt length {s} > cache max_len {s_max}")
+    m = min(s, s_max)   # a rolling cache keeps only the last window
+    slots = np.arange(s - m, s) % s_max
+    ck = cache["k"].at[:, :, slots].set(ks[:, :, s - m:].astype(dtype))
+    cv = cache["v"].at[:, :, slots].set(vs[:, :, s - m:].astype(dtype))
+    return logits, {"pos": jnp.full((b,), s, jnp.int32), "k": ck, "v": cv}
 
 
 def decode_step(params, cache, tokens, cfg: ModelConfig,

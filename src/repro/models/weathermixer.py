@@ -204,3 +204,13 @@ def apply(params, batch, cfg: ModelConfig,
     lam = jax.nn.sigmoid(params["blend"]).astype(y.dtype)
     out = lam * xin + (1.0 - lam) * y
     return out, jnp.float32(0.0)
+
+
+def forecast_step(params, fields, cfg: ModelConfig,
+                  jcfg: JigsawConfig = DEFAULT_JIGSAW) -> jax.Array:
+    """One serving rollout step: the training forward minus every piece
+    of loss/grad machinery.  fields [B, lat, lon, C] -> fields at +dt;
+    closed over itself it IS the autoregressive forecast (the serving
+    engine jits it once per batch bucket and donates ``fields``)."""
+    out, _ = apply(params, {"fields": fields}, cfg, jcfg, rollout=1)
+    return out

@@ -1,0 +1,13 @@
+"""Serving subsystem (DESIGN.md §13).
+
+* ``engine``    -- ForecastEngine: continuous-batching autoregressive
+                   field-rollout serving (jit compile-cache per batch
+                   bucket, donated state, restore-onto-serving-mesh).
+* ``scheduler`` -- host-side microbatch policy (coalescing, step-
+                   boundary admission, bucket growth, lead fan-out).
+* ``step``      -- token-LM serving: fused prefill + donated-cache
+                   greedy decode through ``decode_step``.
+"""
+from repro.serve.engine import ForecastEngine, ServeConfig  # noqa: F401
+from repro.serve.scheduler import (ForecastResult,  # noqa: F401
+                                   MicrobatchScheduler)

@@ -2,13 +2,26 @@
 
 ``make_serve_step`` builds the single-token decode function the
 decode_32k / long_500k dry-run shapes lower (one new token against a
-seq_len-sized cache), and ``generate`` drives it for the runnable
-examples.
+seq_len-sized cache); ``generate`` drives it for the runnable examples.
+
+ISSUE 8 changes:
+  * ``prefill`` is now the fused single-``apply`` path -- one teacher-
+    forced forward captures every layer's K/V and writes the cache back
+    in O(1) applies instead of O(S) decode steps
+    (``transformer.prefill_cache``).  The token-wise loop survives as
+    ``prefill_tokenwise``, the eager interpret-mode reference the parity
+    tests compare against, and the automatic fallback for families
+    without a fused path (audio enc-dec, ssm/hybrid, local:global
+    stacks).
+  * the decode step is jit-CACHED (one executable per (cfg, jcfg),
+    both frozen/hashable) and DONATES the cache pytree, so each step
+    updates the KV buffers in place instead of copying the whole cache,
+    and repeated ``generate`` calls never re-jit.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional, Tuple
+from functools import lru_cache
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,15 +46,25 @@ def make_serve_step(cfg: ModelConfig, jcfg: JigsawConfig,
     return serve_step
 
 
-def prefill(params, prompts: jax.Array, cfg: ModelConfig,
-            jcfg: JigsawConfig, max_len: int, cache_dtype=jnp.bfloat16,
-            extra_batch: Optional[dict] = None):
-    """Fill a fresh cache by decoding the prompt token-by-token.
+@lru_cache(maxsize=None)
+def jit_serve_step(cfg: ModelConfig, jcfg: JigsawConfig):
+    """Compile-once decode step, cached by (cfg, jcfg).
 
-    (A fused prefill via ``apply`` + cache write-back is the production
-    path on TPU; token-wise prefill keeps the CPU example simple and
-    exercises the same decode_step the dry-run lowers.)
-    """
+    The cache pytree (arg 1) is DONATED: XLA reuses its buffers for the
+    updated cache, so one decode step allocates O(new tokens), not
+    O(cache) -- and because the wrapper itself is cached, repeated
+    ``generate`` calls hit the same executable instead of re-jitting a
+    fresh closure per call (the seed-era behavior)."""
+    return jax.jit(make_serve_step(cfg, jcfg), donate_argnums=(1,))
+
+
+def prefill_tokenwise(params, prompts: jax.Array, cfg: ModelConfig,
+                      jcfg: JigsawConfig, max_len: int,
+                      cache_dtype=jnp.bfloat16,
+                      extra_batch: Optional[dict] = None):
+    """Token-by-token prefill through ``decode_step`` -- the eager
+    (interpret-mode) reference path: slow, but byte-for-byte the decode
+    semantics, so the fused path asserts parity against it."""
     b, s = prompts.shape
     cache = M.init_cache(cfg, b, max_len, dtype=cache_dtype)
     if cfg.family == "audio" and extra_batch is not None:
@@ -55,13 +78,48 @@ def prefill(params, prompts: jax.Array, cfg: ModelConfig,
     return last, cache
 
 
+def prefill(params, prompts: jax.Array, cfg: ModelConfig,
+            jcfg: JigsawConfig, max_len: int, cache_dtype=jnp.bfloat16,
+            extra_batch: Optional[dict] = None,
+            fused: Optional[bool] = None):
+    """Fill a fresh cache from the prompt.
+
+    fused=None (default) uses the fused single-``apply`` prefill when
+    the family supports it and falls back token-wise otherwise;
+    True forces fused (raises for unsupported families); False forces
+    the token-wise reference."""
+    if cfg.family == "audio" or extra_batch is not None:
+        if fused:
+            raise NotImplementedError("fused prefill: no enc-dec support")
+        fused = False
+    if fused is False:
+        return prefill_tokenwise(params, prompts, cfg, jcfg, max_len,
+                                 cache_dtype, extra_batch)
+    try:
+        logits, cache = M.prefill_cache(params, {"tokens": prompts}, cfg,
+                                        jcfg, max_len, dtype=cache_dtype)
+    except NotImplementedError:
+        if fused:
+            raise
+        return prefill_tokenwise(params, prompts, cfg, jcfg, max_len,
+                                 cache_dtype, extra_batch)
+    nxt = jnp.argmax(logits[:, -1:, : cfg.vocab_size],
+                     axis=-1).astype(jnp.int32)
+    return nxt, cache
+
+
 def generate(params, prompts: jax.Array, cfg: ModelConfig,
              jcfg: JigsawConfig, *, steps: int, max_len: int,
-             extra_batch: Optional[dict] = None) -> jax.Array:
-    """Greedy generation: prefill then ``steps`` decode steps."""
+             extra_batch: Optional[dict] = None,
+             fused: Optional[bool] = None) -> jax.Array:
+    """Greedy generation: prefill then ``steps`` decode steps.
+
+    The decode loop donates the cache each step and keeps every output
+    token on device (one concatenate at the end) -- no per-step host
+    round-trips."""
     nxt, cache = prefill(params, prompts, cfg, jcfg, max_len,
-                         extra_batch=extra_batch)
-    step = jax.jit(make_serve_step(cfg, jcfg))
+                         extra_batch=extra_batch, fused=fused)
+    step = jit_serve_step(cfg, jcfg)
     out = [nxt]
     for _ in range(steps - 1):
         nxt, cache = step(params, cache, nxt)

@@ -31,6 +31,8 @@ SCENARIOS = [
     # preempt_resume_exact + elastic_reshard_resume run via
     # tests/test_resilience.py (the resilience CI job needs them there;
     # listing them here too would double their cost in tier-1)
+    # serving_restore runs via tests/test_serve.py (the serve CI job
+    # needs it there; same double-cost rule)
 ]
 
 
