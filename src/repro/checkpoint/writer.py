@@ -34,6 +34,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 from jax.sharding import Mesh
 
+from repro import telemetry
 from repro.checkpoint import sharded
 
 
@@ -87,12 +88,17 @@ class AsyncCheckpointWriter:
         """Run write_fn; retry transient OSErrors with jittered
         exponential backoff before re-raising (non-OSError failures are
         bugs, not weather -- they surface immediately)."""
+        tr = telemetry.get_tracer()
         for attempt in range(1, self.retries + 1):
             try:
-                return self._write_fn(snap, path, **kwargs)
+                with tr.span("ckpt.write", path=path, attempt=attempt):
+                    return self._write_fn(snap, path, **kwargs)
             except OSError as e:
                 if attempt >= self.retries:
                     raise
+                tr.counter("ckpt.retries")
+                tr.event("ckpt.retry", path=path, attempt=attempt,
+                         error=repr(e))
                 delay = (self.retry_backoff * (2 ** (attempt - 1))
                          * (1.0 + random.random()))
                 print(f"[ckpt] transient write error on {path!r} "
@@ -152,5 +158,8 @@ class AsyncCheckpointWriter:
     @staticmethod
     def _prune(paths: List[str]) -> None:
         """Delete GC'd checkpoint dirs (missing ones are fine)."""
-        for p in paths:
-            shutil.rmtree(p, ignore_errors=True)
+        if not paths:
+            return
+        with telemetry.get_tracer().span("ckpt.prune", n=len(paths)):
+            for p in paths:
+                shutil.rmtree(p, ignore_errors=True)

@@ -49,6 +49,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 # hashable (start, stop) bounds per dim from a sharding index tuple
 # (``slice`` is unhashable on py<3.12); shared with the checkpoint
 # subsystem, which records the same bounds in its manifest
+from repro import telemetry
 from repro.checkpoint.manifest import normalize_index as _normalize_index
 from repro.data.tokens import TokenDataConfig, TokenDataset
 from repro.data.weather import WeatherDataConfig, WeatherDataset
@@ -60,7 +61,7 @@ from repro.data.weather import WeatherDataConfig, WeatherDataset
 
 @dataclasses.dataclass
 class PipelineStats:
-    """Host-side I/O accounting, updated by the pipeline on every read.
+    """Host-side I/O accounting, updated by the pipeline once per batch.
 
     ``generated_bytes[key]``  bytes actually produced by shard reads on
                               this host (deduplicated across devices that
@@ -68,6 +69,13 @@ class PipelineStats:
     ``rank_bytes[key][dev]``  logical bytes each device's rank read --
                               this is what ``io_bytes_per_rank`` models
                               and what the ∝ 1/ranks test measures.
+
+    Updates go through :meth:`record_batch`, which holds the process
+    tracer's lock for the whole batch: the prefetch worker and a
+    same-process consumer (stats readers, a ``sync-full`` A/B run) never
+    interleave read-modify-writes on these counters, and the aggregate
+    totals land in the tracer's counter table in the same critical
+    section (one lock acquisition per batch, not one per device read).
     """
     steps: int = 0
     plan_builds: int = 0
@@ -77,11 +85,38 @@ class PipelineStats:
 
     def record(self, key: str, device_id: int, nbytes: int,
                generated: bool) -> None:
-        if generated:
-            self.generated_bytes[key] = (
-                self.generated_bytes.get(key, 0) + nbytes)
-        per = self.rank_bytes.setdefault(key, {})
-        per[device_id] = per.get(device_id, 0) + nbytes
+        """Single-read back-compat shim; prefer :meth:`record_batch`."""
+        self.record_batch([(key, device_id, nbytes, generated)])
+
+    def record_batch(self, reads: Sequence[Tuple[str, int, int, bool]],
+                     steps: int = 0, plan_builds: int = 0) -> None:
+        """Apply one batch's worth of read records ``(key, device_id,
+        nbytes, generated)`` atomically under the telemetry lock."""
+        gen = 0
+        dev_bytes = 0
+        tr = telemetry.get_tracer()
+        with tr.lock:
+            self.steps += steps
+            self.plan_builds += plan_builds
+            for key, device_id, nbytes, generated in reads:
+                if generated:
+                    self.generated_bytes[key] = (
+                        self.generated_bytes.get(key, 0) + nbytes)
+                    gen += nbytes
+                per = self.rank_bytes.setdefault(key, {})
+                per[device_id] = per.get(device_id, 0) + nbytes
+                dev_bytes += nbytes
+            updates = {}
+            if steps:
+                updates["pipeline.batches"] = steps
+            if plan_builds:
+                updates["pipeline.plan_builds"] = plan_builds
+            if gen:
+                updates["pipeline.generated_bytes"] = gen
+            if dev_bytes:
+                updates["pipeline.device_bytes"] = dev_bytes
+            if updates:
+                tr.add_counters_locked(updates)
 
 
 # ---------------------------------------------------------------------------
@@ -281,20 +316,27 @@ class InputPipeline:
 
     # -- device-side ----------------------------------------------------
     def get(self, step: int, horizon: int = 1) -> Dict[str, jax.Array]:
-        """The global (possibly sharded) device batch for ``step``."""
-        self.stats.steps += 1
+        """The global (possibly sharded) device batch for ``step``.
+
+        Stats are collected locally while reading and committed in ONE
+        ``record_batch`` call at the end -- the whole batch's accounting
+        is a single critical section, so a concurrent stats reader never
+        observes a half-applied batch."""
+        reads: list = []
         if self.mesh is None:
-            return {k: jnp.asarray(v)
-                    for k, v in self.host_batch(step, horizon).items()}
-        if self.mode == "sync-full":
+            out = {k: jnp.asarray(v)
+                   for k, v in self.host_batch(step, horizon).items()}
+        elif self.mode == "sync-full":
             hb = self.host_batch(step, horizon)
-            for k, v in hb.items():
-                self.stats.record(k, -1, v.nbytes, generated=True)
-            return {k: jax.device_put(jnp.asarray(v),
-                                      self._sharding_for(k, v.shape))
-                    for k, v in hb.items()}
-        return {k: self._assemble(k, step, horizon)
-                for k in self.source.keys}
+            reads.extend((k, -1, v.nbytes, True) for k, v in hb.items())
+            out = {k: jax.device_put(jnp.asarray(v),
+                                     self._sharding_for(k, v.shape))
+                   for k, v in hb.items()}
+        else:
+            out = {k: self._assemble(k, step, horizon, reads)
+                   for k in self.source.keys}
+        self.stats.record_batch(reads, steps=1)
+        return out
 
     def _plan_for(self, key: str) -> _ReadPlan:
         """The (cached) per-host read plan for ``key``: unique slices
@@ -312,20 +354,22 @@ class InputPipeline:
                              tuple((nidx, tuple(devs))
                                    for nidx, devs in groups.items()))
             self._plans[key] = plan
-            self.stats.plan_builds += 1
+            self.stats.record_batch([], plan_builds=1)
         return plan
 
-    def _assemble(self, key: str, step: int, horizon: int) -> jax.Array:
+    def _assemble(self, key: str, step: int, horizon: int,
+                  reads: list) -> jax.Array:
         """Build the global array from per-host partitioned reads: each
         unique slice in the plan is generated ONCE and fanned out to
-        every device that replicates it."""
+        every device that replicates it.  Read records are appended to
+        ``reads`` for the caller's one-shot ``record_batch``."""
         plan = self._plan_for(key)
         arrays = []
         for nidx, devs in plan.reads:
             buf = np.ascontiguousarray(
                 self.source.read_key(key, step, horizon, nidx))
             for j, dev in enumerate(devs):
-                self.stats.record(key, dev.id, buf.nbytes, generated=j == 0)
+                reads.append((key, dev.id, buf.nbytes, j == 0))
                 arrays.append(jax.device_put(buf, dev))
         return jax.make_array_from_single_device_arrays(
             plan.shape, plan.sharding, arrays)
@@ -361,13 +405,15 @@ class InputPipeline:
 
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
         stop = threading.Event()
+        tr = telemetry.get_tracer()
 
         def worker():
             try:
                 for i in range(n):
                     if stop.is_set():
                         return
-                    batch = self.get(start_step + i, int(horizons[i]))
+                    with tr.span("pipeline.produce", step=start_step + i):
+                        batch = self.get(start_step + i, int(horizons[i]))
                     while not stop.is_set():
                         # bounded put: never blocks forever against a
                         # consumer that has already given up (stop()
@@ -386,6 +432,10 @@ class InputPipeline:
         t.start()
         try:
             for i in range(n):
+                # depth BEFORE the blocking get: the signal the engine's
+                # data_wait spans are cross-checked against (0 here means
+                # the consumer is about to stall on the producer)
+                tr.gauge("pipeline.queue_depth", q.qsize())
                 batch, err = q.get()
                 if err is not None:
                     raise err

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 
 from repro import checkpoint as ckpt
 from repro import compat
+from repro import telemetry
 from repro.configs.registry import get_config
 from repro.core import precision
 from repro.core.sharding import RULES_1D
@@ -79,6 +80,13 @@ class EngineConfig:
     pipeline: str = "sharded"  # "sharded" | "sync-full"
     prefetch: int = 2          # 0 disables the background thread
     metrics_out: Optional[str] = None
+    metrics_format: str = "jsonl"  # "jsonl" (crash-safe append, one
+                               # line per record) | "json" (legacy full
+                               # dump at the end of the run)
+    telemetry: bool = True     # span/step-record tracing (DESIGN.md §14;
+                               # counters stay live even when False)
+    trace: Optional[str] = None    # Chrome trace-event export path; a
+                               # sibling .jsonl gets the step records
     preemption: bool = False   # SIGTERM/SIGUSR1 -> final save + Preempted
     preempt_at_step: Optional[int] = None  # chaos hook: self-SIGTERM
                                # after this step (or REPRO_PREEMPT_AT_STEP)
@@ -96,6 +104,10 @@ class TrainEngine:
         self.arch = arch
         self.config = config
         self.reduced = reduced
+        if config.metrics_format not in ("jsonl", "json"):
+            raise ValueError(
+                f"unknown metrics_format {config.metrics_format!r} "
+                f"(expected 'jsonl' or 'json')")
         cfg = config_override if config_override is not None \
             else get_config(arch)
         if reduced:
@@ -126,6 +138,25 @@ class TrainEngine:
             self.rules = RULES_1D
         self.cfg = cfg
         self.jcfg = SH.jigsaw_for(cfg).replace(rules=self.rules)
+        self.mesh_model, self.mesh_data = mesh_model, mesh_data
+
+        # telemetry (DESIGN.md §14): the engine owns the process tracer;
+        # the pipeline / checkpoint writer / resilience hooks report
+        # into it via telemetry.get_tracer().  The analytic cost model
+        # turns each step's wall time into mfu / comm_fraction /
+        # achieved_tflops (telemetry/accounting.py).
+        self.tracer = telemetry.Tracer(enabled=config.telemetry)
+        telemetry.set_tracer(self.tracer)
+        self.cost_model = telemetry.build_cost_model(
+            cfg, n_model=mesh_model, n_data=mesh_data,
+            batch=config.batch, seq_len=config.seq_len)
+        self.tracer.set_meta(
+            arch=arch, reduced=reduced, mesh_model=mesh_model,
+            mesh_data=mesh_data, scheme=cfg.scheme, impl=cfg.impl,
+            kernel=cfg.kernel, precision=self.policy.name,
+            steps=config.steps, batch=config.batch,
+            rollout=config.rollout, zero1=config.zero1,
+            cost_model=self.cost_model.as_meta())
 
         key = jax.random.PRNGKey(config.seed)
         # copy init_params: the step donates its buffers, and the caller
@@ -202,6 +233,7 @@ class TrainEngine:
         self._eval_pipeline: Optional[InputPipeline] = None
         self._eval_fn = None
         self.history: List[Dict] = []
+        self._metrics_flushed = 0   # history records already appended
         self.step_idx = 0
         # async sharded checkpointing (repro.checkpoint, DESIGN.md §9):
         # snapshot on this thread, stream files from a background one
@@ -276,44 +308,76 @@ class TrainEngine:
         if c.preemption or c.preempt_at_step is not None:
             handler = resilience.PreemptionHandler(
                 preempt_at_step=c.preempt_at_step).install()
+        tr = self.tracer
         try:
             with self._mesh_ctx():
                 t0 = time.time()
-                it = self.pipeline.iterate(self.r_sched[start:],
-                                           start_step=start)
-                for i, batch in zip(range(start, c.steps), it):
-                    metrics = self.dispatch(batch, int(self.r_sched[i]))
-                    if i % c.log_every == 0 or i == c.steps - 1:
-                        m = {k: float(v) for k, v in metrics.items()}
-                        m["step"] = i
-                        m["wall_s"] = round(time.time() - t0, 1)
-                        self.history.append(m)
-                        print(f"step {i:5d}  loss {m['loss']:.4f}  "
-                              f"lr {m['lr']:.2e}  ({m['wall_s']}s)")
-                    pending_val = None
-                    if c.eval_every and i and i % c.eval_every == 0:
-                        em = self.evaluate()
-                        self.history.append(dict(em, step=i, eval=True))
-                        print(f"step {i:5d}  "
-                              f"val_loss {em['val_loss']:.4f}")
-                        pending_val = em["val_loss"]
-                    if on_step is not None:
-                        on_step(i, metrics)
-                    if c.ckpt and c.ckpt_every and i \
-                            and i % c.ckpt_every == 0:
-                        self.save(f"{c.ckpt}-{i}", periodic=True)
-                    if pending_val is not None:
-                        # after the save: when eval and ckpt cadences
-                        # align, the marker points at THIS step's
-                        # checkpoint, not the previous one
-                        self._mark_best(pending_val)
+                it = iter(self.pipeline.iterate(self.r_sched[start:],
+                                                start_step=start))
+                t_prev = time.perf_counter()
+                for i in range(start, c.steps):
+                    # data_wait: time the loop spends blocked on the
+                    # input pipeline (0 when prefetch is ahead)
+                    with tr.span("data_wait", step=i) as dw:
+                        try:
+                            batch = next(it)
+                        except StopIteration:
+                            break
+                    r = int(self.r_sched[i])
+                    # "step" is the PARENT span of everything this
+                    # iteration does after the batch arrives: dispatch,
+                    # eval, ckpt_submit nest under it in the trace
+                    with tr.span("step", step=i, rollout=r):
+                        with tr.span("dispatch", step=i):
+                            metrics = self.dispatch(batch, r)
+                        # per-step wall time = submit-to-submit delta:
+                        # jax dispatch is async, so the device time of
+                        # step i surfaces as backpressure on iteration
+                        # i+1; the deltas sum to true wall time without
+                        # forcing a per-step sync (which would serialize
+                        # the overlap this repo exists to measure)
+                        now = time.perf_counter()
+                        wall, t_prev = now - t_prev, now
+                        tr.step_record(
+                            step=i, rollout=r, dur_s=wall,
+                            data_wait_s=dw.dur_s,
+                            **self.cost_model.metrics(wall, rollout=r))
+                        if i % c.log_every == 0 or i == c.steps - 1:
+                            m = {k: float(v) for k, v in metrics.items()}
+                            m["step"] = i
+                            m["wall_s"] = round(time.time() - t0, 1)
+                            self.history.append(m)
+                            self._write_metrics()
+                            print(f"step {i:5d}  loss {m['loss']:.4f}  "
+                                  f"lr {m['lr']:.2e}  ({m['wall_s']}s)")
+                        pending_val = None
+                        if c.eval_every and i and i % c.eval_every == 0:
+                            with tr.span("eval", step=i):
+                                em = self.evaluate()
+                            self.history.append(dict(em, step=i,
+                                                     eval=True))
+                            self._write_metrics()
+                            print(f"step {i:5d}  "
+                                  f"val_loss {em['val_loss']:.4f}")
+                            pending_val = em["val_loss"]
+                        if on_step is not None:
+                            on_step(i, metrics)
+                        if c.ckpt and c.ckpt_every and i \
+                                and i % c.ckpt_every == 0:
+                            self.save(f"{c.ckpt}-{i}", periodic=True)
+                        if pending_val is not None:
+                            # after the save: when eval and ckpt
+                            # cadences align, the marker points at THIS
+                            # step's checkpoint, not the previous one
+                            self._mark_best(pending_val)
                     if handler is not None and handler.poll(i):
                         self._preempt_finalize(i, handler)
             if c.ckpt:
                 self.save(c.ckpt)
                 print(f"checkpoint -> {c.ckpt}")
             self.wait_checkpoints()    # barrier for in-flight writes
-            self._write_metrics()
+            self._write_metrics(final=True)
+            self._export_telemetry()
             return self.history
         finally:
             if handler is not None:
@@ -328,6 +392,7 @@ class TrainEngine:
         from repro.launch import resilience
         c = self.config
         sig = handler.received
+        self.tracer.event("preempt.signal", signum=sig, step=i)
         print(f"[preempt] signal {sig} after step {i}: "
               f"final synchronous save, then resumable exit")
         self.pipeline.stop()
@@ -351,16 +416,55 @@ class TrainEngine:
                 self.save(path, block=True, periodic=True)
                 self.preempt_stats = {"step": i,
                                       "final_save_s": time.time() - t0}
+                self.tracer.event("preempt.final_save", step=i,
+                                  dur_s=self.preempt_stats["final_save_s"],
+                                  path=path)
             print(f"[preempt] checkpoint durable -> {path}")
-        self._write_metrics()
+        self._write_metrics(final=True)
+        # flush the trace BEFORE raising: the Preempted exit is exactly
+        # when the operator needs to see where the run's time went
+        self._export_telemetry()
         raise resilience.Preempted(step=self.step_idx, checkpoint=path,
                                    signum=sig)
 
-    def _write_metrics(self) -> None:
-        if self.config.metrics_out:
-            import json
-            with open(self.config.metrics_out, "w") as f:
-                json.dump(self.history, f, indent=1)
+    def _write_metrics(self, final: bool = False) -> None:
+        """Persist the metrics history.
+
+        Default ``metrics_format="jsonl"``: crash-safe APPEND of the
+        records added since the last flush, one JSON object per line --
+        called at every log/eval cadence, so a kill -9 loses at most one
+        flush window and never tears the file, and the cost per call is
+        O(new records), not O(run length).  ``"json"`` keeps the legacy
+        whole-history dump, written only when ``final`` (run end /
+        preemption) -- rewriting it per flush would be O(n^2) over a
+        long run and a torn file if killed mid-dump."""
+        if not self.config.metrics_out:
+            return
+        import json
+        if self.config.metrics_format == "json":
+            if final:
+                with open(self.config.metrics_out, "w") as f:
+                    json.dump(self.history, f, indent=1)
+            return
+        new = self.history[self._metrics_flushed:]
+        if not new:
+            return
+        with open(self.config.metrics_out, "a") as f:
+            for rec in new:
+                f.write(json.dumps(rec) + "\n")
+        self._metrics_flushed = len(self.history)
+
+    def _export_telemetry(self) -> None:
+        """Write the Chrome trace (+ sibling step-record JSONL) when
+        ``config.trace`` is set.  Called at run end AND on the
+        preemption path, so a reclaimed node still leaves its trace."""
+        c = self.config
+        if not c.trace:
+            return
+        self.tracer.export_chrome(c.trace)
+        jsonl = telemetry.jsonl_path_for(c.trace)
+        self.tracer.export_jsonl(jsonl)
+        print(f"trace -> {c.trace} (+ {jsonl})")
 
     # -- evaluation ------------------------------------------------------
     def evaluate(self, n_batches: Optional[int] = None) -> Dict[str, float]:
@@ -446,11 +550,19 @@ class TrainEngine:
             print(f"[ckpt] earlier async checkpoint write failed: {e!r}; "
                   f"proceeding with save of {path!r}")
             self._stale_ckpt_error = e
-        self.last_save = self._writer.save(
-            path, {"params": self.params, "opt_state": self.opt_state},
-            step=self.step_idx, extra=extra, mesh=self.mesh, block=block,
-            prune=prune, process_index=jax.process_index(),
-            process_count=jax.process_count())
+        # ckpt_submit covers the synchronous part the train loop pays
+        # for: the device->host snapshot (plus, under block=True, the
+        # whole write); the background streaming shows up as ckpt.write
+        # spans on the writer thread's own track
+        with self.tracer.span("ckpt_submit", path=path, block=block,
+                              step=self.step_idx):
+            self.last_save = self._writer.save(
+                path, {"params": self.params,
+                       "opt_state": self.opt_state},
+                step=self.step_idx, extra=extra, mesh=self.mesh,
+                block=block, prune=prune,
+                process_index=jax.process_index(),
+                process_count=jax.process_count())
 
     def _mark_best(self, val_loss: float) -> None:
         """Track the best eval loss; point the ``<ckpt>-best.json`` marker

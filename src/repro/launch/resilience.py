@@ -39,6 +39,7 @@ import time
 import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
+from repro import telemetry
 from repro.checkpoint.sharded import (checkpoint_complete,  # noqa: F401
                                       latest_checkpoint)
 
@@ -141,6 +142,10 @@ class PreemptionHandler:
         if (self.installed and not self.should_stop
                 and self.preempt_at_step is not None
                 and step == self.preempt_at_step):
+            # emitted here, NOT in _on_signal: the tracer lock is not
+            # async-signal-safe
+            telemetry.get_tracer().event("preempt.chaos_sigterm",
+                                         step=step)
             os.kill(os.getpid(), signal.SIGTERM)
         return self.should_stop
 
@@ -194,29 +199,41 @@ class Supervisor:
         return latest_checkpoint(self.ckpt_root, prefix=self.prefix)
 
     def run(self) -> int:
+        tr = telemetry.get_tracer()
         restarts = 0
         delay = self.backoff
         while True:
             resume = self._discover()
             argv = self.build_cmd(resume, len(self.attempts))
             self.resumes.append(resume)
-            rc = self._run_cmd(argv)
+            tr.event("supervisor.launch", attempt=len(self.attempts),
+                     resume=resume)
+            with tr.span("supervisor.attempt",
+                         attempt=len(self.attempts)):
+                rc = self._run_cmd(argv)
             self.attempts.append(rc)
+            tr.event("supervisor.exit", attempt=len(self.attempts) - 1,
+                     code=rc)
             if rc == 0:
                 return 0
             if restarts >= self.max_restarts:
                 print(f"[supervisor] exit {rc} with no restart budget "
                       f"left ({self.max_restarts}); giving up")
+                tr.event("supervisor.give_up", code=rc,
+                         restarts=restarts)
                 return rc
             restarts += 1
+            tr.counter("supervisor.restarts")
             if rc in self.resumable_codes:
                 print(f"[supervisor] resumable exit ({rc}); relaunching "
                       f"immediately (restart {restarts}/{self.max_restarts})")
+                tr.counter("supervisor.resumable_restarts")
                 continue
             sleep = delay * (1.0 + 0.25 * random.random())
             print(f"[supervisor] crash exit ({rc}); backing off "
                   f"{sleep:.1f}s then relaunching "
                   f"(restart {restarts}/{self.max_restarts})")
+            tr.event("supervisor.backoff", seconds=sleep, code=rc)
             self.backoffs.append(sleep)
             self.sleep_fn(sleep)
             delay = min(delay * 2.0, self.max_backoff)

@@ -34,6 +34,7 @@ def serve(arch: str, *, ckpt: Optional[str] = None, requests: int = 32,
           precision: Optional[str] = None, mode: str = "continuous",
           buckets: Sequence[int] = (1, 2, 4, 8), coalesce_ms: float = 0.0,
           seed: int = 0, reduced: bool = True, warmup: bool = True,
+          trace: Optional[str] = None,
           config_override=None, quiet: bool = False):
     """Build an engine, push ``requests`` synthetic forecasts through
     it, and return ``(results, engine, wall_seconds)``."""
@@ -42,7 +43,7 @@ def serve(arch: str, *, ckpt: Optional[str] = None, requests: int = 32,
         config_override=config_override,
         config=ServeConfig(buckets=tuple(buckets), mode=mode,
                            coalesce_s=coalesce_ms / 1e3,
-                           precision=precision, seed=seed))
+                           precision=precision, seed=seed, trace=trace))
     cfg = engine.cfg
     ds = WeatherDataset(WeatherDataConfig(
         lat=cfg.wm_lat, lon=cfg.wm_lon, channels=cfg.wm_channels,
@@ -69,6 +70,9 @@ def serve(arch: str, *, ckpt: Optional[str] = None, requests: int = 32,
               f"p95 {s['p95_s'] * 1e3:.1f}ms | {s['device_steps']} rollout "
               f"steps, {s['formed']} batch forms, {s['grown']} grows, "
               f"{s['compiles']} compiles (0 post-warmup = steady state)")
+    out = engine.export_trace()
+    if out and not quiet:
+        print(f"[serve] trace -> {out}")
     return results, engine, wall
 
 
@@ -99,13 +103,16 @@ def main():
     ap.add_argument("--coalesce-ms", type=float, default=0.0,
                     help="idle burst-coalescing window")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace-event export path for the serving "
+                         "spans + latency histograms")
     args = ap.parse_args()
     serve(args.arch, ckpt=args.ckpt, requests=args.requests,
           leads=[int(x) for x in args.leads.split(",")],
           mesh_data=args.mesh_data, precision=args.precision,
           mode=args.mode, buckets=[int(x) for x in args.buckets.split(",")],
           coalesce_ms=args.coalesce_ms, seed=args.seed,
-          reduced=not args.full)
+          reduced=not args.full, trace=args.trace)
 
 
 if __name__ == "__main__":

@@ -47,7 +47,9 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq_len: int = 128,
           lr: float = 1e-3, log_every: int = 10, ckpt: str = None,
           ckpt_every: int = 0, keep_ckpts: int = 0, resume: str = None,
           async_save: bool = True,
-          seed: int = 0, metrics_out: str = None, init_params=None,
+          seed: int = 0, metrics_out: str = None,
+          metrics_format: str = "jsonl", trace: str = None,
+          telemetry: bool = True, init_params=None,
           pipeline: str = "sharded", prefetch: int = 2, accum: int = 1,
           zero1: bool = False, eval_every: int = 0, config_override=None,
           preemption: bool = False, preempt_at_step: int = None):
@@ -66,7 +68,9 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq_len: int = 128,
             lr=lr, log_every=log_every, ckpt=ckpt, ckpt_every=ckpt_every,
             keep_ckpts=keep_ckpts, resume=resume, async_save=async_save,
             seed=seed, precision=precision,
-            metrics_out=metrics_out, pipeline=pipeline, prefetch=prefetch,
+            metrics_out=metrics_out, metrics_format=metrics_format,
+            trace=trace, telemetry=telemetry,
+            pipeline=pipeline, prefetch=prefetch,
             accum=accum, zero1=zero1, eval_every=eval_every,
             preemption=preemption, preempt_at_step=preempt_at_step))
     history = engine.run()
@@ -113,6 +117,19 @@ def main():
                     help="block the loop on checkpoint writes instead of "
                          "the async background writer")
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--metrics-format", default="jsonl",
+                    choices=["jsonl", "json"],
+                    help="jsonl (default): crash-safe append, one JSON "
+                         "object per line; json: legacy whole-history "
+                         "dump written once at run end")
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace-event export path (load in "
+                         "Perfetto); a sibling .jsonl gets the per-step "
+                         "mfu/comm_fraction records for "
+                         "launch/trace_report.py")
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable span tracing (the overhead benchmark's "
+                         "baseline; counters stay live)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--pipeline", default="sharded",
                     choices=["sharded", "sync-full"],
@@ -150,7 +167,9 @@ def main():
               keep_ckpts=args.keep_ckpts,
               resume=args.resume, async_save=not args.sync_save,
               seed=args.seed,
-              metrics_out=args.metrics_out, pipeline=args.pipeline,
+              metrics_out=args.metrics_out,
+              metrics_format=args.metrics_format, trace=args.trace,
+              telemetry=not args.no_telemetry, pipeline=args.pipeline,
               prefetch=args.prefetch, accum=args.accum, zero1=args.zero1,
               eval_every=args.eval_every, preemption=True)
     except resilience.Preempted as p:

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import telemetry
 from repro.configs.registry import get_config
 from repro.core import precision
 from repro.launch import shapes as SH
@@ -59,6 +60,8 @@ class ServeConfig:
     coalesce_s: float = 0.0           # idle burst-coalescing window
     precision: Optional[str] = None   # serving policy preset (may differ
     seed: int = 0                     # from the checkpoint's)
+    telemetry: bool = True            # span tracing (histograms stay live)
+    trace: Optional[str] = None       # Chrome trace export path
 
     def replace(self, **kw) -> "ServeConfig":
         return dataclasses.replace(self, **kw)
@@ -96,6 +99,13 @@ class ForecastEngine:
                      if mesh_data > 1 else None)
         self.stats = {"compiles": 0, "device_steps": 0, "wait_ticks": 0,
                       "warmup_s": 0.0}
+        # engine-local tracer: admission-to-delivery histograms (one per
+        # lead time) + serve spans; not the process tracer, so several
+        # engines in one process (A/B benchmarks) never mix percentiles
+        self.tracer = telemetry.Tracer(enabled=config.telemetry)
+        self.tracer.set_meta(surface="serve", arch=arch, reduced=reduced,
+                             mesh_data=mesh_data, mode=config.mode,
+                             buckets=list(config.buckets))
         self.sched = MicrobatchScheduler(
             config.buckets, mode=config.mode,
             coalesce_s=config.coalesce_s, clock=clock)
@@ -262,24 +272,40 @@ class ForecastEngine:
         if tick.wait is not None:
             self.stats["wait_ticks"] += 1
             return "wait"
+        tr = self.tracer
         if tick.form is not None:
-            self._state = self._fns(tick.form)["zeros"]()
+            with tr.span("serve.form", bucket=tick.form):
+                self._state = self._fns(tick.form)["zeros"]()
             self._bucket = tick.form
         elif tick.grow is not None:
-            self._state = self._grow(self._bucket, tick.grow)(self._state)
+            with tr.span("serve.grow", b_from=self._bucket,
+                         b_to=tick.grow):
+                self._state = self._grow(self._bucket,
+                                         tick.grow)(self._state)
             self._bucket = tick.grow
         fns = self._fns(self._bucket)
-        for slot, req in tick.admit:
-            self._state = fns["admit"](self._state,
-                                       self._put_fields(req.fields),
-                                       np.int32(slot))
-        self._state = fns["step"](self.params, self._state)
+        if tick.admit:
+            with tr.span("serve.admit", n=len(tick.admit),
+                         bucket=self._bucket):
+                for slot, req in tick.admit:
+                    self._state = fns["admit"](self._state,
+                                               self._put_fields(req.fields),
+                                               np.int32(slot))
+        with tr.span("serve.step", bucket=self._bucket):
+            self._state = fns["step"](self.params, self._state)
         self.stats["device_steps"] += 1
+        tr.counter("serve.device_steps")
         peels, _finished = self.sched.advance()
         now = self._clock()
         for slot, req, lead in peels:
-            out = np.asarray(fns["peel"](self._state, np.int32(slot)))
+            with tr.span("serve.peel", lead=lead):
+                out = np.asarray(fns["peel"](self._state, np.int32(slot)))
             req.deliver(lead, out, now)
+            # admission-to-delivery latency histograms: the engine's
+            # serving SLO, one track per lead time plus the overall one
+            lat = now - req.submit_t
+            tr.observe("serve.latency_s", lat)
+            tr.observe(f"serve.latency_s/lead={lead}", lat)
         return "step"
 
     def drain(self, poll_s: float = 1e-3) -> None:
@@ -326,13 +352,34 @@ class ForecastEngine:
 
     # -- reporting ---------------------------------------------------------
     def summary(self, results: Sequence[ForecastResult]) -> dict:
-        lat = sorted(r.latency() for r in results if r.done())
-        pct = lambda p: lat[min(len(lat) - 1, int(p * len(lat)))] if lat \
-            else float("nan")
+        """Serving report over everything this engine delivered: the
+        admission-to-delivery percentiles come from the engine's
+        telemetry histograms (p50/p95/p99 overall and per lead time),
+        not a private sort of ``results``."""
+        h = self.tracer.hist_summary("serve.latency_s")
+        nan = float("nan")
         sc = self.sched.counters
+        leads = {}
+        for name in self.tracer.hist_names():
+            if name.startswith("serve.latency_s/lead="):
+                lead = int(name.split("=", 1)[1])
+                leads[lead] = self.tracer.hist_summary(name)
         return {"requests": len(results),
-                "p50_s": pct(0.50), "p95_s": pct(0.95),
+                "p50_s": h.get("p50", nan), "p95_s": h.get("p95", nan),
+                "p99_s": h.get("p99", nan),
+                "deliveries": h.get("count", 0),
+                "lead_latency_s": leads,
                 "device_steps": self.stats["device_steps"],
                 "compiles": self.stats["compiles"],
                 "admitted": sc["admitted"], "completed": sc["completed"],
                 "formed": sc["formed"], "grown": sc["grown"]}
+
+    def export_trace(self, path: Optional[str] = None) -> Optional[str]:
+        """Write this engine's Chrome trace (+ sibling JSONL) to
+        ``path`` or ``config.trace``; returns the path (None = no-op)."""
+        path = path or self.config.trace
+        if not path:
+            return None
+        self.tracer.export_chrome(path)
+        self.tracer.export_jsonl(telemetry.jsonl_path_for(path))
+        return path

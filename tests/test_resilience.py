@@ -186,7 +186,7 @@ def test_engine_preempt_finalize_and_exact_resume(tmp_path):
     assert eng.preempt_stats["final_save_s"] > 0
     import json
     with open(mfile) as f:
-        logged = json.load(f)
+        logged = [json.loads(line) for line in f if line.strip()]
     assert [h["step"] for h in logged] == [0, 1]   # metrics persisted
 
     resumed = engine(resume=path + "-1")
